@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: stable timing on a busy single-core box."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall seconds; blocks on device results."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), r
+
+
+def time_host(fn, *args, warmup: int = 0, iters: int = 3, **kw):
+    """Median wall seconds for host (numpy) code."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), r
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

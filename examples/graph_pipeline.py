@@ -1,0 +1,68 @@
+"""End-to-end driver: the paper's production pipeline, miniaturized.
+
+snapshots (FlockDB dumps) -> SnapshotStore (HDFS/GCS) -> ETL (dedup,
+degree-cap, pack) -> hybrid platform (planner routes) -> multi-account
+detection + combined connected users -> ResultSink (BigQuery/GCS) for
+downstream ML.
+
+    PYTHONPATH=src python examples/graph_pipeline.py [workdir]
+"""
+import sys
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.query import GraphQuery, GraphPlatform
+from repro.data import synthetic as S
+from repro.data.etl import GraphETL, Snapshot, SnapshotStore, ResultSink
+
+workdir = sys.argv[1] if len(sys.argv) > 1 else "/tmp/graph_pipeline"
+t_start = time.time()
+
+# ---- 1. Ingest four daily snapshots (paper: 4 daily snapshot datasets) --
+store = SnapshotStore(f"{workdir}/snapshots")
+rng = np.random.default_rng(0)
+N_USERS, N_IDS = 30_000, 10_000
+for day in range(4):
+    u, i = S.safety_bipartite_graph(N_USERS, N_IDS, seed=day)
+    store.write(Snapshot(f"day{day}", u, i + N_USERS))  # ids offset
+print(f"[ingest] {len(store.list())} snapshots")
+
+# ---- 2. ETL: union -> dedup -> build (exact COO + capped ELL) ----------
+etl = GraphETL(max_adjacent_nodes=100)          # the paper's legacy cap
+snaps = [store.read(n) for n in store.list()]
+coo, ell, report = etl.build(snaps, n_vertices=N_USERS + N_IDS)
+print(f"[etl] edges_in={report.n_edges_in} dedup={report.n_edges_deduped} "
+      f"capped_loss={report.lost_fraction:.1%} "
+      f"(paper: 27.8% at cap=100) hash={report.content_hash}")
+
+# ---- 3. Multi-account detection (two-hop motif) -------------------------
+from repro.core.algorithms.two_hop import multi_account_pairs
+u_all = np.concatenate([s.src for s in snaps])
+i_all = np.concatenate([s.dst for s in snaps]) - N_USERS
+pairs, valid, count, _ = multi_account_pairs(
+    u_all, i_all, N_USERS, N_IDS, max_adjacent_nodes=100)
+print(f"[multi-account] {int(count)} distinct same-user pairs")
+
+# ---- 4. Combined connected users on the unified graph -------------------
+sym = G.build_coo(np.concatenate([u_all, i_all + N_USERS]),
+                  np.concatenate([i_all + N_USERS, u_all]),
+                  N_USERS + N_IDS)
+platform = GraphPlatform(sym)
+r = platform.query(GraphQuery.connected_components())
+labels = np.asarray(r.value)[:N_USERS]
+n_comp = len(np.unique(labels))
+print(f"[connected-users] {n_comp} components via {r.engine} "
+      f"({r.iterations} supersteps) | {r.meta['plan'].reason}")
+
+# ---- 5. Persist for downstream ML ---------------------------------------
+sink = ResultSink(f"{workdir}/results")
+sink.write("same_user_pairs",
+           {"pairs": np.asarray(pairs)[np.asarray(valid)]},
+           {"algo": "two_hop", "cap": 100, "count": int(count)})
+sink.write("connected_users",
+           {"user": np.arange(N_USERS), "component": labels},
+           {"algo": "combined_connected_users", "engine": r.engine})
+print(f"[sink] results persisted under {workdir}/results")
+print(f"[done] end-to-end {time.time()-t_start:.1f}s")

@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests: prefill once, greedy-decode
+a continuation per request (the decode_* dry-run cells, live).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.argv = ["serve", "--arch", "smollm-360m", "--reduced",
+            "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+
+from repro.launch.serve import main  # noqa: E402
+main()

@@ -1,0 +1,28 @@
+"""Train a smollm-family model on the synthetic corpus for a few hundred
+steps with checkpointing — the downstream-ML consumer of the platform.
+
+Reduced config by default (CPU-friendly); pass --full for the real
+360M-parameter config on accelerator hosts.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] if len(sys.argv) > 1 else [])
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+# Reuse the production driver — examples should exercise the same path
+# operators run.
+sys.argv = [
+    "train", "--arch", "smollm-360m", "--steps", str(args.steps),
+    "--batch", "8", "--seq", "64", "--lr", "3e-3",
+    "--ckpt-dir", "/tmp/train_lm_example",
+] + ([] if args.full else ["--reduced"])
+
+from repro.launch.train import main  # noqa: E402
+main()

@@ -1,0 +1,22 @@
+"""Mistral-Large-2407 123B [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768, dense llama-arch.
+The largest dense arch in the pool — FSDP + TP required to fit v5e.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1000000.0,
+    mlp_act="silu",
+    tie_embeddings=False,
+    fsdp=True,
+)

@@ -1,0 +1,8 @@
+# The paper's primary contribution: the hybrid dual-engine graph
+# analytics platform (engines + cost-based planner + algorithm library).
+from repro.core import graph
+from repro.core import partition
+from repro.core import pregel
+from repro.core import planner
+from repro.core.engines import LocalEngine, DistributedEngine
+from repro.core.query import GraphQuery, GraphPlatform

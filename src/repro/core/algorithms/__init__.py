@@ -1,0 +1,9 @@
+from repro.core.algorithms.pagerank import pagerank
+from repro.core.algorithms.connected_components import connected_components
+from repro.core.algorithms.two_hop import (
+    two_hop_pairs,
+    two_hop_count_upper_bound,
+    multi_account_pairs,
+)
+from repro.core.algorithms.degrees import degree_stats
+from repro.core.algorithms.similarity import jaccard_similarity, common_neighbors

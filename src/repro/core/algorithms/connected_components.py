@@ -1,0 +1,110 @@
+"""Combined connected users == connected components on the unified graph.
+
+The paper's second flagship workload: the legacy Scalding pipeline ran CC
+*separately per identifier edge-set* then merged (17-29 h); GraphFrames
+builds ONE graph over all identifiers and runs CC directly (40 min, 37x).
+We implement that unified formulation as hash-to-min label propagation:
+
+    label[v] <- min(label[v], min_{u in N(v)} label[u])
+
+on the symmetrized edge list, iterated to fixpoint inside one XLA while
+loop.  ``accelerated=True`` adds pointer-jumping (label <- label[label])
+each round — O(log d) instead of O(d) rounds (beyond-paper optimization;
+GraphFrames' large-star/small-star needs dynamic edge mutation, which a
+static-shape TPU program cannot do, pointer jumping gets the same
+asymptotics with a pure gather).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.partition import ShardedCOO, partition
+from repro.core.pregel import PregelSpec, run_pregel
+
+
+def _cc_message(lbl_src, w):
+    return lbl_src
+
+
+def _cc_apply(lbl, agg, ids, gval):
+    return jnp.minimum(lbl, agg)
+
+
+def _cc_apply_jump(lbl, agg, ids, gval):
+    # pointer jumping: labels are vertex ids, chase one hop
+    new = jnp.minimum(lbl, agg)
+    return jnp.minimum(new, new[jnp.clip(new, 0, new.shape[0] - 1)])
+
+
+def _cc_halt(old, new, valid):
+    return jnp.logical_not(jnp.any(jnp.logical_and(valid, new != old)))
+
+
+_CC_SPEC = PregelSpec(message=_cc_message, combine="min", apply=_cc_apply,
+                      identity=np.iinfo(np.int32).max, halt=_cc_halt)
+_CC_SPEC_JUMP = PregelSpec(message=_cc_message, combine="min",
+                           apply=_cc_apply_jump,
+                           identity=np.iinfo(np.int32).max, halt=_cc_halt)
+
+
+def connected_components(
+    g: G.GraphCOO,
+    max_iters: int = 200,
+    mesh=None,
+    n_data: int = 1,
+    n_model: int = 1,
+    accelerated: bool = True,
+    sharded: Optional[ShardedCOO] = None,
+):
+    """Returns (labels [V] int32 — min vertex id per component, iters).
+
+    ``g`` must already be symmetrized (``build_coo(..., symmetrize=True)``);
+    isolated vertices keep their own id.
+    """
+    V = g.n_vertices
+    if sharded is None:
+        sharded = partition(g, n_data, n_model)
+    v_local = sharded.v_local
+    replicated = sharded.n_model == 1
+    spec = _CC_SPEC_JUMP if (accelerated and replicated) else _CC_SPEC
+    if replicated:
+        init = jnp.arange(V, dtype=jnp.int32)
+    else:
+        n_pad = sharded.n_model * v_local
+        init = jnp.arange(n_pad, dtype=jnp.int32)
+    labels, iters = run_pregel(spec, sharded, init, max_iters, mesh=mesh)
+    return labels[:V], iters
+
+
+def num_components(labels) -> int:
+    """Count-only fast path (the query where the paper's Neo4j wins 300x:
+    'Neo4j takes <2 s to return the count, Spark spends ~10 min')."""
+    V = labels.shape[0]
+    is_root = labels == jnp.arange(V, dtype=labels.dtype)
+    return int(jnp.sum(is_root))
+
+
+def connected_components_reference(src, dst, n_vertices):
+    """Union-find oracle (numpy, host) for tests."""
+    parent = np.arange(n_vertices, dtype=np.int64)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for s, d in zip(np.asarray(src), np.asarray(dst)):
+        rs, rd = find(int(s)), find(int(d))
+        if rs != rd:
+            if rs < rd:
+                parent[rd] = rs
+            else:
+                parent[rs] = rd
+    return np.array([find(i) for i in range(n_vertices)], dtype=np.int32)

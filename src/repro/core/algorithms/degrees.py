@@ -1,0 +1,27 @@
+"""Degree statistics — the cheapest library call, and the planner's input."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import graph as G
+
+
+def degree_stats(g: G.GraphCOO) -> dict:
+    """Host-side summary used by the planner and the ETL reports."""
+    outd = G.out_degrees(g)
+    ind = G.in_degrees(g)
+    return {
+        "n_vertices": g.n_vertices,
+        "n_edges": g.n_edges,
+        "max_out_degree": int(jnp.max(outd)),
+        "max_in_degree": int(jnp.max(ind)),
+        "mean_degree": float(g.n_edges / max(g.n_vertices, 1)),
+        "dangling": int(jnp.sum(outd == 0)),
+    }
+
+
+def degree_histogram(g: G.GraphCOO, n_bins: int = 64):
+    """log2-bucketed in-degree histogram (power-law diagnostics for ETL)."""
+    ind = G.in_degrees(g)
+    b = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(ind, 1.0))), 0, n_bins - 1)
+    return jnp.bincount(b.astype(jnp.int32), length=n_bins)

@@ -1,0 +1,106 @@
+"""PageRank on the BSP engine.
+
+The paper's recommendation teams run PageRank on the user-follow graph;
+the legacy Scalding implementation takes >11 hours per iteration.  Here a
+whole run (power iterations + dangling-mass redistribution + convergence
+check) is one XLA program.
+
+Formulation (matches ``networkx.pagerank`` so tests can cross-check):
+
+    x' = (1-a)/V + a * (A_norm^T x + dangling_mass / V)
+
+with ``A_norm[u, v] = w(u, v) / outdeg(u)`` and
+``dangling_mass = sum_{outdeg(u)=0} x[u]``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.partition import ShardedCOO, partition
+from repro.core.pregel import PregelSpec, run_pregel
+
+
+def _normalize_and_partition(
+    g: G.GraphCOO, n_data: int, n_model: int
+) -> tuple[ShardedCOO, jax.Array]:
+    """Fold 1/outdeg into edge weights; return sharded edges + dangling mask."""
+    outdeg = G.out_degrees(g)
+    dangling = (outdeg == 0).astype(jnp.float32)
+    inv = jnp.where(outdeg > 0, 1.0 / jnp.maximum(outdeg, 1.0), 0.0)
+    src_c = jnp.clip(g.src, 0, g.n_vertices - 1)
+    w_norm = g.w * inv[src_c]
+    g_norm = G.GraphCOO(g.src, g.dst, w_norm, g.n_vertices, g.n_edges)
+    return partition(g_norm, n_data, n_model), dangling
+
+
+def pagerank(
+    g: G.GraphCOO,
+    alpha: float = 0.85,
+    tol: float = 1e-8,
+    max_iters: int = 100,
+    mesh=None,
+    n_data: int = 1,
+    n_model: int = 1,
+    sharded: Optional[ShardedCOO] = None,
+    dangling: Optional[jax.Array] = None,
+):
+    """Returns (ranks [V] summing to 1, iterations_run)."""
+    if sharded is None:
+        sharded, dangling = _normalize_and_partition(g, n_data, n_model)
+    V = g.n_vertices
+    v_local = sharded.v_local
+    n_model_eff = sharded.n_model
+
+    # Vertex state layout: dangling flag rides along per owned vertex.
+    if n_model_eff > 1:
+        d_pad = jnp.zeros(n_model_eff * v_local, jnp.float32).at[:V].set(dangling)
+    else:
+        d_pad = dangling
+
+    def message(x_src, w):
+        return x_src * w
+
+    def global_value(x, ids, valid):
+        # dangling mass owned by this vertex shard
+        d = d_pad[ids] if n_model_eff > 1 else d_pad
+        return jnp.sum(jnp.where(valid, x * d, 0.0))
+
+    def apply(x, agg, ids, dangling_mass):
+        return (1.0 - alpha) / V + alpha * (agg + dangling_mass / V)
+
+    def halt(old, new, valid):
+        # per-shard L1 budget; exact when vertices are replicated
+        budget = tol * V / n_model_eff
+        return jnp.sum(jnp.where(valid, jnp.abs(new - old), 0.0)) < budget
+
+    spec = PregelSpec(
+        message=message, combine="sum", apply=apply, identity=0.0,
+        halt=halt, global_value=global_value,
+    )
+    init = jnp.full((n_model_eff * v_local,) if n_model_eff > 1 else (V,),
+                    1.0 / V, jnp.float32)
+    state, iters = run_pregel(spec, sharded, init, max_iters, mesh=mesh)
+    return state[:V], iters
+
+
+def pagerank_reference(src, dst, n_vertices, alpha=0.85, tol=1e-8, max_iters=100):
+    """Pure-numpy oracle (same formulation) for tests."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    V = n_vertices
+    outdeg = np.bincount(src, minlength=V).astype(np.float64)
+    x = np.full(V, 1.0 / V)
+    for it in range(max_iters):
+        contrib = np.where(outdeg[src] > 0, x[src] / np.maximum(outdeg[src], 1), 0.0)
+        agg = np.bincount(dst, weights=contrib, minlength=V)
+        dm = x[outdeg == 0].sum()
+        new = (1 - alpha) / V + alpha * (agg + dm / V)
+        if np.abs(new - x).sum() < tol * V:
+            return new, it + 1
+        x = new
+    return x, max_iters

@@ -1,0 +1,306 @@
+"""Device-ready graph representations.
+
+The paper's platform moves graphs between a distributed dataflow engine
+(Spark/GraphFrames) and an in-memory graph database (Neo4j).  On TPU every
+representation must be fixed-shape, so we keep three formats:
+
+* ``GraphCOO``  — destination-sorted edge list, padded with a sentinel
+  vertex id ``V`` so ``jax.ops.segment_*`` with ``num_segments=V+1`` drops
+  padding for free.  This is the *exact* format (no degree cap) and the
+  unit of edge partitioning for the distributed engine.
+* ``GraphCSR``  — ``indptr/indices``; the LocalEngine's native format
+  (the Neo4j "index-free adjacency" analogue: pointer-chase becomes slice).
+* ``GraphELL`` — per-vertex neighbor lists padded to a max degree ``K``.
+  This is the paper's ``MaxAdjacentNodes`` cap (Table I) turned into the
+  TPU-native layout: gather + masked row-reduce is exactly what the VPU
+  wants, and skew becomes padding instead of stragglers.
+
+All constructors take host-side ``np.ndarray`` edge lists (the ETL layer
+works in numpy, like Scalding worked in Hadoop) and produce pytrees of
+``jnp`` arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphCOO:
+    """Destination-sorted, padded COO edge list.
+
+    Padding edges have ``src == dst == n_vertices`` (the sentinel row) and
+    ``w == 0``.
+    """
+
+    src: Array          # [E_pad] int32
+    dst: Array          # [E_pad] int32, sorted ascending
+    w: Array            # [E_pad] float32 (1.0 for unweighted)
+    n_vertices: int     # static
+    n_edges: int        # true edge count (static)
+
+    # -- pytree protocol (n_vertices / n_edges are static aux data) --------
+    def tree_flatten(self):
+        return (self.src, self.dst, self.w), (self.n_vertices, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        src, dst, w = children
+        return cls(src, dst, w, aux[0], aux[1])
+
+    @property
+    def e_pad(self) -> int:
+        return int(self.src.shape[0])
+
+    def nbytes(self) -> int:
+        return self.e_pad * (4 + 4 + 4)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphCSR:
+    """CSR adjacency: out-neighbors of v are indices[indptr[v]:indptr[v+1]]."""
+
+    indptr: Array       # [V+1] int32
+    indices: Array      # [E_pad] int32 (padded tail with sentinel V)
+    w: Array            # [E_pad] float32
+    n_vertices: int
+    n_edges: int
+
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.w), (self.n_vertices, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indptr, indices, w = children
+        return cls(indptr, indices, w, aux[0], aux[1])
+
+    def nbytes(self) -> int:
+        return int(self.indptr.shape[0]) * 4 + int(self.indices.shape[0]) * 8
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphELL:
+    """ELLPACK: fixed-width neighbor matrix (the MaxAdjacentNodes layout).
+
+    ``nbr[v, k]`` is the k-th in-neighbor of ``v`` (source of an edge into
+    v); invalid slots have ``mask == False`` and ``nbr == n_vertices``
+    (sentinel, so gathers read the identity pad row).
+    """
+
+    nbr: Array          # [V, K] int32
+    mask: Array         # [V, K] bool
+    w: Array            # [V, K] float32
+    n_vertices: int
+    n_edges: int        # edges retained after capping
+    n_edges_total: int  # edges before capping (for Table I loss accounting)
+
+    def tree_flatten(self):
+        return (self.nbr, self.mask, self.w), (
+            self.n_vertices, self.n_edges, self.n_edges_total)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        nbr, mask, w = children
+        return cls(nbr, mask, w, aux[0], aux[1], aux[2])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.nbr.shape[1])
+
+    @property
+    def lost_fraction(self) -> float:
+        """Table I: fraction of edges dropped by the degree cap."""
+        if self.n_edges_total == 0:
+            return 0.0
+        return 1.0 - self.n_edges / self.n_edges_total
+
+    def nbytes(self) -> int:
+        v, k = self.nbr.shape
+        return int(v) * int(k) * (4 + 1 + 4)
+
+
+# ---------------------------------------------------------------------------
+# Host-side constructors (numpy; this is the ETL substrate's device handoff)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    if x.shape[0] >= n:
+        return x[:n]
+    pad = np.full((n - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def build_coo(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_vertices: int,
+    w: Optional[np.ndarray] = None,
+    pad_multiple: int = 1024,
+    symmetrize: bool = False,
+    dedup: bool = True,
+) -> GraphCOO:
+    """Sort edges by destination, optionally symmetrize/dedup, pad."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if w is None:
+        w = np.ones_like(src, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    if dedup and src.size:
+        key = src.astype(np.int64) * np.int64(n_vertices + 1) + dst.astype(np.int64)
+        _, keep = np.unique(key, return_index=True)
+        src, dst, w = src[keep], dst[keep], w[keep]
+    order = np.argsort(dst, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    n_edges = int(src.shape[0])
+    e_pad = max(pad_multiple, round_up(n_edges, pad_multiple))
+    sentinel = np.int32(n_vertices)
+    return GraphCOO(
+        src=jnp.asarray(_pad_to(src, e_pad, sentinel)),
+        dst=jnp.asarray(_pad_to(dst, e_pad, sentinel)),
+        w=jnp.asarray(_pad_to(w, e_pad, 0.0)),
+        n_vertices=int(n_vertices),
+        n_edges=n_edges,
+    )
+
+
+def build_csr(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_vertices: int,
+    w: Optional[np.ndarray] = None,
+    pad_multiple: int = 1024,
+    symmetrize: bool = False,
+) -> GraphCSR:
+    """CSR over *out*-neighbors: row v lists targets of edges from v."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if w is None:
+        w = np.ones_like(src, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    order = np.argsort(src, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    counts = np.bincount(src, minlength=n_vertices).astype(np.int32)
+    indptr = np.zeros(n_vertices + 1, dtype=np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    n_edges = int(src.shape[0])
+    e_pad = max(pad_multiple, round_up(n_edges, pad_multiple))
+    return GraphCSR(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(_pad_to(dst, e_pad, np.int32(n_vertices))),
+        w=jnp.asarray(_pad_to(w, e_pad, 0.0)),
+        n_vertices=int(n_vertices),
+        n_edges=n_edges,
+    )
+
+
+def build_ell(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_vertices: int,
+    max_degree: int,
+    w: Optional[np.ndarray] = None,
+    symmetrize: bool = False,
+    direction: str = "in",
+) -> GraphELL:
+    """Pack edges into the fixed-width ELL layout, capping per-vertex degree.
+
+    ``direction='in'``: row v holds *sources* of edges into v (what SpMV /
+    message aggregation wants).  Edges beyond ``max_degree`` for a vertex
+    are dropped — this is exactly the paper's ``MaxAdjacentNodes``
+    restriction, and ``lost_fraction`` reproduces Table I.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if w is None:
+        w = np.ones_like(src, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    if direction == "in":
+        row, col = dst, src
+    else:
+        row, col = src, dst
+    n_total = int(row.shape[0])
+    order = np.argsort(row, kind="stable")
+    row, col, w = row[order], col[order], w[order]
+    counts = np.bincount(row, minlength=n_vertices)
+    # slot index of each edge within its row
+    starts = np.zeros(n_vertices, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    slot = np.arange(n_total, dtype=np.int64) - starts[row]
+    keep = slot < max_degree
+    row_k, col_k, w_k, slot_k = row[keep], col[keep], w[keep], slot[keep]
+    nbr = np.full((n_vertices, max_degree), np.int32(n_vertices), dtype=np.int32)
+    mask = np.zeros((n_vertices, max_degree), dtype=bool)
+    wm = np.zeros((n_vertices, max_degree), dtype=np.float32)
+    nbr[row_k, slot_k] = col_k
+    mask[row_k, slot_k] = True
+    wm[row_k, slot_k] = w_k
+    return GraphELL(
+        nbr=jnp.asarray(nbr),
+        mask=jnp.asarray(mask),
+        w=jnp.asarray(wm),
+        n_vertices=int(n_vertices),
+        n_edges=int(keep.sum()),
+        n_edges_total=n_total,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device-side primitives shared by engines
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_vertices", "op"))
+def segment_combine(values: Array, segment_ids: Array, n_vertices: int, op: str):
+    """Aggregate edge messages to destination vertices.
+
+    ``segment_ids`` may contain the sentinel ``n_vertices`` (padding); one
+    extra segment swallows it and is dropped.  ``op`` in {sum,min,max}.
+    """
+    n = n_vertices + 1
+    if op == "sum":
+        out = jax.ops.segment_sum(values, segment_ids, num_segments=n)
+    elif op == "min":
+        out = jax.ops.segment_min(values, segment_ids, num_segments=n)
+    elif op == "max":
+        out = jax.ops.segment_max(values, segment_ids, num_segments=n)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return out[:n_vertices]
+
+
+def pad_vertex_state(x: Array, identity) -> Array:
+    """Append the sentinel row so gathers through padded ids read identity."""
+    pad = jnp.full((1,) + x.shape[1:], identity, dtype=x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def out_degrees(g: GraphCOO) -> Array:
+    ones = (g.src < g.n_vertices).astype(jnp.float32)
+    return segment_combine(ones, g.src, g.n_vertices, "sum")
+
+
+def in_degrees(g: GraphCOO) -> Array:
+    ones = (g.dst < g.n_vertices).astype(jnp.float32)
+    return segment_combine(ones, g.dst, g.n_vertices, "sum")

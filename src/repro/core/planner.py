@@ -1,0 +1,124 @@
+"""Cost-based engine router — the paper's Fig. 5 finding made executable.
+
+The paper's empirical law:
+
+* small/medium graph, small output  -> local engine (Neo4j) wins
+  ("Neo4j takes <2 s to return the count, Spark spends ~10 min");
+* very large graph OR very large output -> distributed engine (Spark)
+  wins; beyond single-instance memory it is the only option;
+* the crossover sits around ~10M vertices for per-vertex outputs on their
+  hardware (Fig. 5) and "less than 100 million edges and vertices" is the
+  paper's rule of thumb for Neo4j.
+
+Instead of a hard-coded threshold we keep an analytic cost model over the
+TPU substrate (HBM bandwidth for the local engine, per-superstep launch +
+collective volume for the distributed engine, host egress for outputs)
+whose constants are calibrated by ``benchmarks/fig5_engine_crossover.py``.
+The model intentionally has few terms — it must be explainable to the
+user in the query plan, like the paper's rule of thumb was.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# TPU v5e-flavored constants (per chip), overridable for calibration.
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+HOST_EGRESS_BW = 4e9      # B/s device->host for result materialization
+LOCAL_DISPATCH_S = 2e-4   # jitted query launch
+DIST_STEP_S = 1.5e-3      # per-superstep launch + sync on a mesh
+LOCAL_MEM_BUDGET = 12e9   # usable HBM for the local engine's graph
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    n_vertices: int
+    n_edges: int
+    bytes_coo: int
+
+    @classmethod
+    def of(cls, graph) -> "GraphStats":
+        return cls(graph.n_vertices, graph.n_edges, graph.nbytes())
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """What the planner needs to know about a query.
+
+    output_rows: expected result cardinality (1 for counts; V for
+    per-vertex tables; pair-count estimates for motifs).
+    iterations: expected supersteps (1 for motifs/degrees).
+    row_bytes: bytes per output row.
+    """
+    algorithm: str
+    output_rows: int
+    iterations: int = 1
+    row_bytes: int = 8
+
+
+@dataclasses.dataclass
+class Plan:
+    engine: str                   # 'local' | 'distributed'
+    est_local_s: float
+    est_dist_s: float
+    reason: str
+
+
+def estimate_local_cost(g: GraphStats, q: QuerySpec) -> float:
+    """One device streams the edge set from HBM each superstep, then
+    egresses the output to the host once."""
+    if g.bytes_coo > LOCAL_MEM_BUDGET:
+        return float("inf")
+    touched = (g.bytes_coo + 8 * g.n_vertices) * q.iterations
+    return (LOCAL_DISPATCH_S
+            + touched / HBM_BW
+            + q.output_rows * q.row_bytes / HOST_EGRESS_BW)
+
+
+def estimate_dist_cost(g: GraphStats, q: QuerySpec, n_chips: int,
+                       vertex_replicated: bool = True) -> float:
+    """Each chip streams E/P edges; every superstep pays a launch/sync and
+    a ring all-reduce of the vertex aggregate; output egress parallelizes
+    over hosts."""
+    n_chips = max(n_chips, 1)
+    touched = (g.bytes_coo / n_chips + 8 * g.n_vertices) * q.iterations
+    coll = 0.0
+    if vertex_replicated and n_chips > 1:
+        ring = 2.0 * (n_chips - 1) / n_chips
+        coll = (8 * g.n_vertices * ring / LINK_BW) * q.iterations
+    egress = q.output_rows * q.row_bytes / (HOST_EGRESS_BW * max(n_chips // 4, 1))
+    return DIST_STEP_S * q.iterations + touched / HBM_BW + coll + egress
+
+
+def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
+    tl = estimate_local_cost(g, q)
+    td = estimate_dist_cost(g, q, n_chips)
+    if tl == float("inf"):
+        return Plan("distributed", tl, td,
+                    f"graph ({g.bytes_coo/1e9:.1f} GB) exceeds local budget")
+    if tl <= td:
+        why = ("small output" if q.output_rows <= 1024 else "medium graph")
+        return Plan("local", tl, td, f"local wins ({why}): "
+                    f"{tl*1e3:.2f} ms vs {td*1e3:.2f} ms")
+    return Plan("distributed", tl, td,
+                f"distributed wins (scale/output): {td*1e3:.2f} ms vs {tl*1e3:.2f} ms")
+
+
+# Canonical query specs for the library algorithms -------------------------
+
+def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
+             expected_pairs: Optional[int] = None) -> QuerySpec:
+    if algorithm == "pagerank":
+        return QuerySpec("pagerank", 1 if count_only else g.n_vertices,
+                         iterations=40)
+    if algorithm == "connected_components":
+        return QuerySpec("connected_components",
+                         1 if count_only else g.n_vertices, iterations=16)
+    if algorithm == "two_hop":
+        rows = 1 if count_only else (expected_pairs or
+                                     max(g.n_edges * 4, g.n_vertices))
+        return QuerySpec("two_hop", rows, iterations=1)
+    if algorithm == "degree_stats":
+        return QuerySpec("degree_stats", 1, iterations=1)
+    raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -1,0 +1,111 @@
+"""GraphQuery — the unified interface layer (paper Section III-A).
+
+The paper's stack puts "a unified user interface ... and code templates"
+above the engines so users never pick Spark-vs-Neo4j by hand.  This is
+that layer: a small declarative query object + ``GraphPlatform`` which
+owns both engines and routes through the cost-based planner.
+
+    platform = GraphPlatform(coo, mesh=mesh)
+    r = platform.query(GraphQuery.connected_components(count_only=True))
+    r.value, r.engine, r.meta['plan']
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core.engines import LocalEngine, DistributedEngine, QueryResult
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphQuery:
+    algorithm: str                      # pagerank | connected_components | two_hop | degree_stats
+    count_only: bool = False
+    params: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def pagerank(cls, alpha=0.85, tol=1e-8, max_iters=100):
+        return cls("pagerank", False,
+                   {"alpha": alpha, "tol": tol, "max_iters": max_iters})
+
+    @classmethod
+    def connected_components(cls, count_only=False, max_iters=200):
+        return cls("connected_components", count_only, {"max_iters": max_iters})
+
+    @classmethod
+    def two_hop(cls, n_users: int, count_only=False, dedup=True):
+        return cls("two_hop", count_only, {"n_users": n_users, "dedup": dedup})
+
+    @classmethod
+    def degree_stats(cls):
+        return cls("degree_stats", True, {})
+
+
+class GraphPlatform:
+    """Owns both engines; routes each query through the planner."""
+
+    def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
+                 n_model: int = 1, local_max_degree: int = 128,
+                 force_engine: Optional[str] = None):
+        self.coo = coo
+        self.mesh = mesh
+        self.stats = P.GraphStats.of(coo)
+        self.force_engine = force_engine
+        self._local: Optional[LocalEngine] = None
+        self._dist: Optional[DistributedEngine] = None
+        self._local_max_degree = local_max_degree
+        self._n_data, self._n_model = n_data, n_model
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self.n_chips = 1
+            for s in mesh.devices.shape:
+                self.n_chips *= s
+        else:
+            self.n_chips = max(n_data * n_model, 1)
+
+    # lazy engine construction: building ELL/partitions is ETL work we
+    # only pay when the planner actually routes there.
+    @property
+    def local(self) -> LocalEngine:
+        if self._local is None:
+            self._local = LocalEngine(self.coo, self._local_max_degree)
+        return self._local
+
+    @property
+    def distributed(self) -> DistributedEngine:
+        if self._dist is None:
+            self._dist = DistributedEngine(self.coo, mesh=self.mesh,
+                                           n_data=self._n_data,
+                                           n_model=self._n_model)
+        return self._dist
+
+    def plan(self, q: GraphQuery) -> P.Plan:
+        spec = P.spec_for(q.algorithm, self.stats, count_only=q.count_only)
+        plan = P.choose_engine(self.stats, spec, self.n_chips)
+        if self.force_engine:
+            plan = dataclasses.replace(plan, engine=self.force_engine,
+                                       reason=f"forced: {self.force_engine}")
+        return plan
+
+    def query(self, q: GraphQuery) -> QueryResult:
+        plan = self.plan(q)
+        eng = self.local if plan.engine == "local" else self.distributed
+        if q.algorithm == "pagerank":
+            r = eng.pagerank(**q.params)
+        elif q.algorithm == "connected_components":
+            r = (eng.num_components(**q.params) if q.count_only
+                 else eng.connected_components(**q.params))
+        elif q.algorithm == "two_hop":
+            if q.count_only:
+                r = eng.two_hop_count()
+            else:
+                r = eng.two_hop_pairs(q.params["n_users"],
+                                      dedup=q.params.get("dedup", True))
+        elif q.algorithm == "degree_stats":
+            r = eng.degree_stats()
+        else:
+            raise ValueError(q.algorithm)
+        r.meta["plan"] = plan
+        return r

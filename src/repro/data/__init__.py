@@ -1,0 +1,2 @@
+from repro.data import synthetic
+from repro.data import etl

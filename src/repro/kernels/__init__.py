@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the platform's compute hot spots:
+#   ell_combine      — ELL gather+combine (SpMV / hash-to-min): the inner
+#                      loop of PageRank and connected components, i.e. the
+#                      paper's two flagship workloads.
+#   flash_attention  — online-softmax attention for the LM serving cells
+#                      (prefill_32k) of the assigned architectures.
+# Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# public wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,1 @@
+from repro.kernels.ell_combine.ops import ell_spmv, ell_spmv_ref

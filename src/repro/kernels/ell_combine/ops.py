@@ -1,0 +1,48 @@
+"""Public jit'd wrapper for the ELL combine kernel.
+
+Handles padding to TPU tile alignment (rows -> block multiple, K -> 128
+lanes), routes to interpret mode on CPU hosts, and exposes the pure-jnp
+reference under the same signature so engines can flip implementations.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_combine.kernel import ell_combine_pallas
+from repro.kernels.ell_combine.ref import ell_combine_ref
+
+_LANE = 128
+VMEM_X_BUDGET = 4 * 1024 * 1024  # floats of gather source we allow in VMEM
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _round_up(n, m):
+    return ((n + m - 1) // m) * m
+
+
+def ell_spmv(nbr, mask, w, x, op: str = "sum", block_rows: int = 512):
+    """Pallas path (interpret on CPU). Falls back to ref when the gather
+    source exceeds the VMEM budget the kernel design assumes."""
+    V, K = nbr.shape
+    if x.shape[0] > VMEM_X_BUDGET:
+        return ell_combine_ref(nbr, mask, w, x, op=op)
+    vp = _round_up(max(V, block_rows), block_rows)
+    kp = _round_up(K, _LANE)
+    if (vp, kp) != (V, K):
+        nbr = jnp.pad(nbr, ((0, vp - V), (0, kp - K)))
+        mask = jnp.pad(mask, ((0, vp - V), (0, kp - K)))
+        w = jnp.pad(w, ((0, vp - V), (0, kp - K)))
+    y = ell_combine_pallas(nbr, mask, w, x, op=op, block_rows=block_rows,
+                           interpret=_on_cpu())
+    return y[:V]
+
+
+def ell_spmv_ref(nbr, mask, w, x, op: str = "sum", block_rows: int = 512):
+    """Reference path under the kernel's signature."""
+    return ell_combine_ref(nbr, mask, w, x, op=op)

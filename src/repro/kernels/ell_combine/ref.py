@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the ELL gather+combine kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_IDENTITY = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+@partial(jax.jit, static_argnames=("op",))
+def ell_combine_ref(nbr, mask, w, x, op: str = "sum"):
+    """y[v] = reduce_k{ op }( mask[v,k] ? f(w[v,k], x[nbr[v,k]]) : id ).
+
+    f = multiply for 'sum' (weighted SpMV); f = identity-on-x for
+    'min'/'max' (label propagation — weights ignored).
+    nbr: [V, K] int32 (invalid slots may hold any index; mask guards).
+    x:   [Vx]  gather source (Vx >= max index + 1).
+    """
+    vals = x[jnp.clip(nbr, 0, x.shape[0] - 1)]            # [V, K]
+    ident = jnp.asarray(_IDENTITY[op], dtype=vals.dtype)
+    if op == "sum":
+        contrib = jnp.where(mask, vals * w, 0.0)
+        return jnp.sum(contrib, axis=1)
+    contrib = jnp.where(mask, vals, ident)
+    red = jnp.min if op == "min" else jnp.max
+    return red(contrib, axis=1)

@@ -1,0 +1,39 @@
+"""Public wrapper: GQA folding, padding, CPU interpret routing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512):
+    """q: [B, Hq, S, D], k/v: [B, Hkv, S, D] -> [B, Hq, S, D].
+
+    GQA: each kv head serves Hq/Hkv query heads; we fold the group into
+    the leading grid dimension so each k/v tile is loaded once per group.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    # [B, Hkv, group, S, D] -> [(B Hkv group), S, D]
+    qg = q.reshape(b, hkv, group, s, d).reshape(b * hkv * group, s, d)
+    kg = jnp.repeat(k.reshape(b * hkv, s, d), group, axis=0)
+    vg = jnp.repeat(v.reshape(b * hkv, s, d), group, axis=0)
+
+    out = flash_attention_pallas(
+        qg, kg, vg, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=_on_cpu())
+    return out.reshape(b, hkv, group, s, d).reshape(b, hq, s, d)

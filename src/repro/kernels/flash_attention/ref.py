@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash attention (all mask variants)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def mha_reference(q, k, v, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: [B, Hq, S, D]; k/v: [B, Hkv, S, D] (GQA: Hq % Hkv == 0).
+
+    window > 0 restricts attention to the last ``window`` positions
+    (sliding-window / local attention, gemma2-style).  softcap > 0
+    applies  softcap * tanh(logits / softcap).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

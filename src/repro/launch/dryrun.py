@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Multi-pod dry-run: AOT-lower + compile every (arch x shape) cell on
+# the production meshes and extract the roofline terms.
+#
+# The XLA_FLAGS assignment above MUST precede every other import (jax
+# locks the device count at first init) — which is also why this header
+# is a comment rather than a docstring-after-code.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+#
+# Per cell this produces a JSON record with:
+#   memory_analysis (bytes/device), cost_analysis (flops, bytes),
+#   collective stats parsed from post-SPMD HLO, the three roofline terms,
+#   and MODEL_FLOPS/HLO_FLOPs (useful-compute ratio).
+# (no `from __future__ import annotations` — the XLA_FLAGS line must be
+#  the first statement of the module, which __future__ imports forbid.)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    SHAPES, get_config, list_archs, shape_applicable, reduced_config)
+from repro.models.registry import build_model
+from repro.models.transformer import dp_axes
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, n_chips
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (
+    make_train_step, init_train_state, state_spec, TrainState)
+from repro.utils import roofline as RL
+from repro.utils.tree import flatten_with_paths
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _ns(tree_spec, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree_spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def usable_dp(batch: int, mesh) -> tuple:
+    """Data-parallel axes that evenly divide the batch (batch=1 cells
+    replicate over dp instead of sharding unevenly)."""
+    sizes = mesh_axis_sizes(mesh)
+    axes = []
+    rem = batch
+    for ax in ("pod", "data"):
+        if ax in sizes and rem % sizes[ax] == 0:
+            axes.append(ax)
+            rem //= sizes[ax]
+    return tuple(axes)
+
+
+def _retarget_batch_specs(specs: dict, dp: tuple) -> dict:
+    """Rewrite the leading batch axis of input PartitionSpecs to ``dp``."""
+    out = {}
+    for k, s in specs.items():
+        parts = list(s)
+        parts[0] = dp if dp else None
+        out[k] = P(*parts)
+    return out
+
+
+def _retarget_cache_spec(tree, dp: tuple):
+    def fix(s):
+        parts = list(s)
+        # cache layouts put batch at index 1 (after the layer axis)
+        if len(parts) >= 2:
+            parts[1] = dp if dp else None
+        return P(*parts)
+    return jax.tree_util.tree_map(
+        fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _sharded_sds(tree_sds, tree_spec, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(
+        one, tree_sds, tree_spec,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _cast_float(tree_sds, dtype):
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+    return jax.tree_util.tree_map(
+        one, tree_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def model_flops_for(cfg, model, params_sds, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = non-embedding params
+    (active params for MoE)."""
+    n = 0
+    for name, leaf in flatten_with_paths(params_sds):
+        if "embedding" in name or "lm_head" in name:
+            continue
+        sz = int(np.prod(leaf.shape))
+        if cfg.family == "moe" and "/mlp/w_" in name:
+            sz = sz * cfg.top_k // max(cfg.n_experts, 1)
+        n += sz
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, mesh, *, reduced: bool = False,
+               microbatches: int = 4, overrides: dict | None = None,
+               remap_tp: bool = False, strip_attn_tp: bool = False):
+    """Build + lower + compile one (arch x shape x mesh) cell.
+
+    Returns (compiled, meta) — meta carries chips/model_flops/etc.
+    ``overrides`` lets the §Perf hillclimb tweak ModelConfig fields
+    (attn_chunk, attn_impl, remat, ...) without new config files.
+    """
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    multi_pod = "pod" in mesh.axis_names
+    model = build_model(cfg)
+    if strip_attn_tp:
+        # MoE variant: attention runs pure-DP (no TP collectives); the
+        # model axis serves expert parallelism only
+        model.strip_tp = True
+    dp = usable_dp(shape.global_batch, mesh)
+    if remap_tp:
+        # Repurpose the model axis as extra data parallelism: batch is
+        # sharded over ('data','model'); param *storage* keeps its layout
+        # (sharded over 'model' where divisible), which XLA now treats as
+        # ZeRO-style storage — weights are all-gathered per layer for
+        # compute and gradients reduce-scattered back by the grad-spec
+        # constraint.  The right config for models too small to amortize
+        # 16-way tensor parallelism.
+        rem = shape.global_batch
+        dp = []
+        for ax in ("pod", "data", "model"):
+            if ax in mesh.axis_names and rem % mesh_axis_sizes(mesh)[ax] == 0:
+                dp.append(ax)
+                rem //= mesh_axis_sizes(mesh)[ax]
+        dp = tuple(dp)
+
+    ins = model.input_specs(shape, multi_pod=multi_pod)
+    ins["specs"] = _retarget_batch_specs(
+        {k: ins["specs"].get(k, P(dp if dp else None, None))
+         for k in ins["arrays"]}, dp)
+    batch_sds = _sharded_sds(ins["arrays"], ins["specs"], mesh)
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = model.param_spec()
+
+    if shape.kind in ("train", "prefill") and shape.seq_len % 16 == 0 \
+            and not remap_tp:
+        model.act_spec = P(dp if dp else None, "model", None)
+    if (overrides or {}).get("attn_impl") == "ring":
+        model.ring_mesh = mesh
+        model.ring_batch_axes = dp if dp else ()
+    if multi_pod and cfg.fsdp and not remap_tp:
+        model.fsdp_axes = ("data", "pod")
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": n_chips(mesh),
+        "model_flops": model_flops_for(cfg, model, params_sds, shape),
+        "kind": shape.kind,
+    }
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            mb = microbatches if shape.global_batch % max(microbatches, 1) == 0 else 1
+            meta["microbatches"] = mb
+            step_fn = make_train_step(model, opt_cfg, microbatches=mb,
+                                      dp_spec=dp if dp else None,
+                                      grad_spec=model.param_spec())
+            st_spec = state_spec(model)
+            state_sds = jax.eval_shape(
+                lambda k: init_train_state(model, k), jax.random.PRNGKey(0))
+            state_sharded = _sharded_sds(state_sds, st_spec, mesh)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(_ns(st_spec, mesh), _ns(ins["specs"], mesh)),
+                out_shardings=(_ns(st_spec, mesh), None),
+            ).lower(state_sharded, batch_sds)
+        elif shape.kind == "prefill":
+            params_bf16 = _cast_float(params_sds, jnp.bfloat16)
+            params_sharded = _sharded_sds(params_bf16, pspec, mesh)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, cache_len=shape.seq_len)
+
+            pre_cspec = _retarget_cache_spec(
+                model.cache_spec(multi_pod=multi_pod), dp)
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(_ns(pspec, mesh), _ns(ins["specs"], mesh)),
+                out_shardings=(None, _ns(pre_cspec, mesh)),
+            ).lower(params_sharded, batch_sds)
+        else:  # decode
+            params_bf16 = _cast_float(params_sds, jnp.bfloat16)
+            params_sharded = _sharded_sds(params_bf16, pspec, mesh)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cspec = _retarget_cache_spec(
+                model.cache_spec(multi_pod=multi_pod), dp)
+            cache_sharded = _sharded_sds(cache_sds, cspec, mesh)
+            idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def decode_fn(params, tokens, cache, index):
+                return model.decode_step(params, tokens, cache, index)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(_ns(pspec, mesh),
+                              _ns(ins["specs"]["tokens"], mesh),
+                              _ns(cspec, mesh), None),
+                out_shardings=(None, _ns(cspec, mesh)),
+            ).lower(params_sharded, batch_sds["tokens"], cache_sharded,
+                    idx_sds)
+        t0 = time.time()
+        compiled = lowered.compile()
+        meta["compile_s"] = time.time() - t0
+    return compiled, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+def analyze_cell(compiled, meta) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_bytes = (getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+        mem_detail = {
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "args": getattr(mem, "argument_size_in_bytes", 0),
+            "out": getattr(mem, "output_size_in_bytes", 0),
+            "alias": getattr(mem, "alias_size_in_bytes", 0),
+        }
+    except Exception:
+        mem_bytes, mem_detail = 0, {}
+    hlo = compiled.as_text()
+    report = RL.analyze(
+        name=f"{meta['arch']}/{meta['shape']}/{meta['mesh']}",
+        cost=cost, hlo_text=hlo, chips=meta["chips"],
+        model_flops_global=meta["model_flops"],
+        memory_bytes=mem_bytes,
+    )
+    rec = dataclasses.asdict(report)
+    rec.update(meta)
+    rec["memory_detail"] = mem_detail
+    rec["roofline_fraction"] = report.roofline_fraction
+    rec["bound_s"] = report.bound_s
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             reduced: bool = False, force: bool = False,
+             microbatches: int = 4, overrides: dict | None = None,
+             remap_tp: bool = False, strip_attn_tp: bool = False,
+             tag: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(out_dir,
+                         f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+    if os.path.exists(fname) and not force:
+        with open(fname) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        compiled, meta = lower_cell(arch, shape_name, mesh, reduced=reduced,
+                                    microbatches=microbatches,
+                                    overrides=overrides, remap_tp=remap_tp,
+                                    strip_attn_tp=strip_attn_tp)
+        rec = analyze_cell(compiled, meta)
+        rec["status"] = "ok"
+        del compiled
+    except SkipCell as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skip", "reason": str(e)}
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    rec["wall_s"] = time.time() - t0
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale configs (CI of the dry-run itself)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               reduced=args.reduced, force=args.force,
+                               microbatches=args.microbatches)
+                status = rec.get("status")
+                n_ok += status == "ok"
+                n_skip += status == "skip"
+                n_err += status == "error"
+                line = f"[{status:5s}] {arch:22s} {shape:12s} {mesh_kind:6s}"
+                if status == "ok":
+                    line += (f" mem/dev={rec.get('memory_per_device_gb', 0):.2f}GB"
+                             f" dominant={rec.get('dominant')}"
+                             f" bound={rec.get('bound_s', 0):.4f}s"
+                             f" compile={rec.get('compile_s', 0):.0f}s")
+                elif status == "error":
+                    line += " " + rec.get("error", "")[:90]
+                print(line, flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

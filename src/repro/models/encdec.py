@@ -1,0 +1,268 @@
+"""Whisper-style encoder-decoder backbone.
+
+Frontend STUB per the assignment: ``input_specs`` supplies precomputed
+audio frame embeddings [B, 1500, d_model] (the conv+mel stack is out of
+scope).  Encoder: bidirectional self-attention, sinusoidal positions.
+Decoder: causal self-attention (KV cache) + cross-attention into the
+encoder output (cross K/V computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models.transformer import DenseLM, dp_axes
+
+
+def _sinusoid(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+class EncDecLM(DenseLM):
+    family = "encdec"
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kd, kc, kx = jax.random.split(key, 4)
+        params = L.init_embed(kx, cfg)
+        params["layers"] = self._init_layers(kd)          # decoder stack
+        params["enc_layers"] = self._init_enc_layers(ke)
+        params["cross"] = self._init_cross_layers(kc)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return params
+
+    def _init_enc_layers(self, key) -> dict:
+        cfg = self.cfg
+        ka, km = jax.random.split(key)
+        lc = cfg.n_encoder_layers
+        return {
+            "ln1": jnp.zeros((lc, cfg.d_model), jnp.float32),
+            "ln2": jnp.zeros((lc, cfg.d_model), jnp.float32),
+            "attn": L.init_attn(ka, cfg, layers=lc),
+            "mlp": L.init_mlp(km, cfg, layers=lc),
+        }
+
+    def _init_cross_layers(self, key) -> dict:
+        cfg = self.cfg
+        lc = cfg.n_layers
+        p = L.init_attn(key, cfg, layers=lc)
+        p["ln"] = jnp.zeros((lc, cfg.d_model), jnp.float32)
+        return p
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, audio_embeds):
+        cfg = self.cfg
+        x = audio_embeds.astype(self.dtype)
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(self.dtype)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(carry, p_l):
+            carry = self._constrain_act(carry)
+            h = L.rms_norm(carry, p_l["ln1"])
+            q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+            o = L.attention_output(q, k, v, pos, pos, cfg.attn_impl,
+                                   causal=False, window=0,
+                                   chunk=cfg.attn_chunk)
+            carry = carry + L.out_proj(p_l["attn"], o, carry.dtype)
+            h2 = L.rms_norm(carry, p_l["ln2"])
+            carry = carry + L.mlp_apply(p_l["mlp"], h2, cfg.mlp_act)
+            return carry, None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return L.rms_norm(x, params["enc_norm"])
+
+    # ----------------------------------------------- decoder (train path)
+    def _decoder(self, params, tokens, enc_out, collect_kv=False):
+        cfg = self.cfg
+        x = L.embed_tokens(params, tokens, cfg, self.dtype)
+        x = x + _sinusoid(tokens.shape[1], cfg.d_model).astype(self.dtype)
+        qpos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+        def body(carry, xs):
+            p_l, c_l = xs
+            carry = self._constrain_act(carry)
+            h = L.rms_norm(carry, p_l["ln1"])
+            q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+            o = L.attention_output(q, k, v, qpos, qpos, cfg.attn_impl,
+                                   causal=True, window=0,
+                                   chunk=cfg.attn_chunk)
+            carry = carry + L.out_proj(p_l["attn"], o, carry.dtype)
+            # cross attention
+            hc = L.rms_norm(carry, c_l["ln"])
+            qc, kc, vc = (hc @ c_l["wq"].astype(carry.dtype),
+                          enc_out @ c_l["wk"].astype(carry.dtype),
+                          enc_out @ c_l["wv"].astype(carry.dtype))
+            b, s, _ = hc.shape
+            qc = qc.reshape(b, s, cfg.n_heads, cfg.d_head)
+            kc = kc.reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+            vc = vc.reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+            oc = L.attention_output(qc, kc, vc, qpos, epos, cfg.attn_impl,
+                                    causal=False, window=0,
+                                    chunk=cfg.attn_chunk)
+            carry = carry + L.out_proj(c_l, oc, carry.dtype)
+            h2 = L.rms_norm(carry, p_l["ln2"])
+            carry = carry + L.mlp_apply(p_l["mlp"], h2, cfg.mlp_act)
+            return carry, ((k, v, kc, vc) if collect_kv else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, kvs = lax.scan(body, x, (params["layers"], params["cross"]))
+        return x, kvs
+
+    def forward(self, params, batch):
+        enc_out = self.encode(params, batch["audio_embeds"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out)
+        return L.unembed(params, x, self.cfg)
+
+    def loss(self, params, batch, vocab_chunk: int = 8):
+        enc_out = self.encode(params, batch["audio_embeds"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out)
+        targets = batch["labels"]
+        b, s = targets.shape
+        nc = vocab_chunk if s % vocab_chunk == 0 else 1
+        xc = x.reshape(b, nc, s // nc, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xx, tt = xs
+            logits = L.unembed(params, xx, self.cfg)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tt, 0)[..., None], axis=-1)[..., 0]
+            valid = (tt >= 0)
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = lax.scan(chunk_loss, (jnp.float32(0), jnp.int32(0)),
+                                 (xc, tc))
+        loss = tot / jnp.maximum(cnt, 1)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        base = super().init_cache(batch_size, cache_len)
+        enc_s = cfg.encoder_seq
+        base["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch_size, enc_s, cfg.n_kv_heads, cfg.d_head),
+            self.dtype)
+        base["cross_v"] = jnp.zeros_like(base["cross_k"])
+        return base
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        enc_out = self.encode(params, batch["audio_embeds"])
+        x, kvs = self._decoder(params, tokens, enc_out, collect_kv=True)
+        k, v, ck, cv = kvs
+        logits = L.unembed(params, x[:, -1:, :], cfg)
+        pad = cache_len - s
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, {"k": k.astype(self.dtype), "v": v.astype(self.dtype),
+                        "cross_k": ck.astype(self.dtype),
+                        "cross_v": cv.astype(self.dtype)}
+
+    def decode_step(self, params, tokens, cache, index):
+        cfg = self.cfg
+        x = L.embed_tokens(params, tokens, cfg, self.dtype)
+        x = x + _sinusoid_at(index, cfg.d_model, self.dtype)
+        epos = jnp.arange(cfg.encoder_seq, dtype=jnp.int32)
+
+        def body(carry, xs):
+            p_l, c_l, k_c, v_c, ck_c, cv_c = xs
+            h = L.rms_norm(carry, p_l["ln1"])
+            q, k1, v1 = L.qkv_proj(p_l["attn"], h, cfg)
+            k_c = lax.dynamic_update_slice_in_dim(
+                k_c, k1.astype(k_c.dtype), index, axis=1)
+            v_c = lax.dynamic_update_slice_in_dim(
+                v_c, v1.astype(v_c.dtype), index, axis=1)
+            o = L.attn_decode(q, k_c, v_c, index, causal=True)
+            carry = carry + L.out_proj(p_l["attn"], o, carry.dtype)
+            hc = L.rms_norm(carry, c_l["ln"])
+            b = hc.shape[0]
+            qc = (hc @ c_l["wq"].astype(carry.dtype)).reshape(
+                b, 1, cfg.n_heads, cfg.d_head)
+            oc = L.attn_decode(qc, ck_c, cv_c, cfg.encoder_seq - 1,
+                               causal=False)
+            carry = carry + L.out_proj(c_l, oc, carry.dtype)
+            h2 = L.rms_norm(carry, p_l["ln2"])
+            carry = carry + L.mlp_apply(p_l["mlp"], h2, cfg.mlp_act)
+            return carry, (k_c, v_c)
+
+        x, (k, v) = lax.scan(
+            body, x, (params["layers"], params["cross"], cache["k"],
+                      cache["v"], cache["cross_k"], cache["cross_v"]))
+        logits = L.unembed(params, x, cfg)
+        return logits, {"k": k, "v": v, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}
+
+    # ------------------------------------------------------- shardings
+    def param_spec(self) -> dict:
+        spec = super().param_spec()
+        fs = self._fsdp_ax()
+        spec["enc_layers"] = {
+            "ln1": P(None, None), "ln2": P(None, None),
+            "attn": {
+                "wq": P(None, fs, "model"), "wk": P(None, fs, "model"),
+                "wv": P(None, fs, "model"), "wo": P(None, "model", fs),
+            },
+            "mlp": {
+                "w_gate": P(None, fs, "model"),
+                "w_up": P(None, fs, "model"),
+                "w_down": P(None, "model", fs),
+            },
+        }
+        spec["cross"] = {
+            "ln": P(None, None),
+            "wq": P(None, fs, "model"), "wk": P(None, fs, "model"),
+            "wv": P(None, fs, "model"), "wo": P(None, "model", fs),
+        }
+        spec["enc_norm"] = P(None)
+        return spec
+
+    def cache_spec(self, multi_pod: bool = True) -> dict:
+        dp = dp_axes(multi_pod)
+        base = super().cache_spec(multi_pod)
+        base["cross_k"] = P(None, dp, None, None, "model")
+        base["cross_v"] = P(None, dp, None, None, "model")
+        return base
+
+    def input_specs(self, shape: ShapeSpec, multi_pod: bool = True) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dp = dp_axes(multi_pod)
+        audio = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                     jnp.float32)
+        a_spec = P(dp, None, None)
+        base = super().input_specs(shape, multi_pod)
+        if shape.kind in ("train", "prefill"):
+            base["arrays"]["audio_embeds"] = audio
+            base["specs"]["audio_embeds"] = a_spec
+        return base
+
+
+def _sinusoid_at(index, d, dtype):
+    half = d // 2
+    dim = jnp.arange(half, dtype=jnp.float32)
+    ang = index.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(dtype)

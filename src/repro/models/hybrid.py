@@ -1,0 +1,172 @@
+"""Hymba hybrid-head LM: parallel attention + Mamba heads per layer.
+
+Each layer runs GQA attention (sliding window everywhere except three
+full-attention layers) and a selective-SSM mixer *in parallel* on the
+same normalized input; the two branch outputs are per-branch normalized
+and averaged (the Hymba fusion), then an MLP follows.  Sub-quadratic:
+the SSM branch carries unbounded context in O(1) state, attention is
+windowed except at the three global layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.transformer import DenseLM, dp_axes
+
+
+class HybridLM(DenseLM):
+    family = "hybrid"
+
+    def _init_layers(self, key) -> dict:
+        cfg = self.cfg
+        ka, km, ks = jax.random.split(key, 3)
+        lcount, d = cfg.n_layers, cfg.d_model
+        p = {
+            "ln1": jnp.zeros((lcount, d), jnp.float32),
+            "ln2": jnp.zeros((lcount, d), jnp.float32),
+            "norm_attn": jnp.zeros((lcount, d), jnp.float32),
+            "norm_ssm": jnp.zeros((lcount, d), jnp.float32),
+            "attn": L.init_attn(ka, cfg, layers=lcount),
+            "ssm": M.mamba_init(ks, cfg, layers=lcount),
+            "mlp": L.init_mlp(km, cfg, layers=lcount),
+        }
+        return p
+
+    def _mixer_train(self, p_l, window, h, qpos):
+        cfg = self.cfg
+        q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+        q = L.rope(q, qpos, cfg.rope_theta)
+        k = L.rope(k, qpos, cfg.rope_theta)
+        o = L.attention_output(q, k, v, qpos, qpos, cfg.attn_impl,
+                               causal=True, window=window,
+                               softcap=cfg.attn_logit_softcap,
+                               chunk=cfg.attn_chunk)
+        attn_out = L.out_proj(p_l["attn"], o, h.dtype)
+        ssm_out, _, _ = M.mamba_mixer(p_l["ssm"], h, cfg)
+        fused = 0.5 * (L.rms_norm(attn_out, p_l["norm_attn"])
+                       + L.rms_norm(ssm_out, p_l["norm_ssm"]))
+        return fused, (k, v)
+
+    def _block_decode(self, p_l, window, x, k_cache, v_cache, index,
+                      ssm_state=None, conv_state=None):
+        cfg = self.cfg
+        h = L.rms_norm(x, p_l["ln1"])
+        q, k1, v1 = L.qkv_proj(p_l["attn"], h, cfg)
+        pos = jnp.full((1,), index, jnp.int32)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k1 = L.rope(k1, pos, cfg.rope_theta)
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k1.astype(k_cache.dtype), index, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v1.astype(v_cache.dtype), index, axis=1)
+        o = L.attn_decode(q, k_cache, v_cache, index, causal=True,
+                          window=window, softcap=cfg.attn_logit_softcap)
+        attn_out = L.out_proj(p_l["attn"], o, x.dtype)
+        ssm_out, ssm_state, conv_state = M.mamba_decode(
+            p_l["ssm"], h, cfg, ssm_state, conv_state)
+        fused = 0.5 * (L.rms_norm(attn_out, p_l["norm_attn"])
+                       + L.rms_norm(ssm_out, p_l["norm_ssm"]))
+        x = x + fused
+        h2 = L.rms_norm(x, p_l["ln2"])
+        x = x + self._ffn(p_l, h2, pos)
+        return x, k_cache, v_cache, ssm_state, conv_state
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        di = cfg.ssm_expand * cfg.d_model
+        base = super().init_cache(batch_size, cache_len)
+        base["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch_size, di, cfg.ssm_state), jnp.float32)
+        base["conv"] = jnp.zeros(
+            (cfg.n_layers, batch_size, cfg.ssm_conv - 1, di), self.dtype)
+        return base
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        x, qpos = self._embed_inputs(params, batch)
+
+        def body(carry, xs):
+            p_l, w_l = xs
+            carry = self._constrain_act(carry)
+            h = L.rms_norm(carry, p_l["ln1"])
+            q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+            q = L.rope(q, qpos, cfg.rope_theta)
+            k = L.rope(k, qpos, cfg.rope_theta)
+            o = L.attention_output(q, k, v, qpos, qpos, cfg.attn_impl,
+                                   causal=True, window=w_l,
+                                   softcap=cfg.attn_logit_softcap,
+                                   chunk=cfg.attn_chunk)
+            attn_out = L.out_proj(p_l["attn"], o, carry.dtype)
+            ssm_out, hT, conv_st = M.mamba_mixer(p_l["ssm"], h, cfg)
+            fused = 0.5 * (L.rms_norm(attn_out, p_l["norm_attn"])
+                           + L.rms_norm(ssm_out, p_l["norm_ssm"]))
+            out = carry + fused
+            h2 = L.rms_norm(out, p_l["ln2"])
+            out = out + self._ffn(p_l, h2, qpos)
+            return out, (k, v, hT, conv_st)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (ks, vs, hTs, convs) = lax.scan(
+            body, x, (params["layers"], self.windows))
+        logits = L.unembed(params, x[:, -1:, :], cfg)
+        pad = cache_len - s
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, {"k": ks.astype(self.dtype),
+                        "v": vs.astype(self.dtype),
+                        "ssm": hTs, "conv": convs}
+
+    def decode_step(self, params, tokens, cache, index):
+        x = L.embed_tokens(params, tokens, self.cfg, self.dtype)
+
+        def body(carry, xs):
+            p_l, w_l, k_c, v_c, s_c, c_c = xs
+            out, k_c, v_c, s_c, c_c = self._block_decode(
+                p_l, w_l, carry, k_c, v_c, index, s_c, c_c)
+            return out, (k_c, v_c, s_c, c_c)
+
+        x, (k, v, s, c) = lax.scan(
+            body, x, (params["layers"], self.windows,
+                      cache["k"], cache["v"], cache["ssm"], cache["conv"]))
+        logits = L.unembed(params, x, self.cfg)
+        return logits, {"k": k, "v": v, "ssm": s, "conv": c}
+
+    # ------------------------------------------------------- shardings
+    def _layer_spec(self, fs) -> dict:
+        s = super()._layer_spec(fs)
+        s["norm_attn"] = P(None, None)
+        s["norm_ssm"] = P(None, None)
+        s["ssm"] = {
+            "w_in": P(None, fs, "model"),
+            "conv_w": P(None, None, "model"),
+            "w_b": P(None, "model", None),
+            "w_c": P(None, "model", None),
+            "w_dt1": P(None, "model", None),
+            "w_dt2": P(None, None, "model"),
+            "dt_bias": P(None, "model"),
+            "a_log": P(None, "model", None),
+            "d_skip": P(None, "model"),
+            "w_out": P(None, "model", fs),
+        }
+        s.pop("ln1_post", None)
+        s.pop("ln2_post", None)
+        return s
+
+    def cache_spec(self, multi_pod: bool = True) -> dict:
+        dp = dp_axes(multi_pod)
+        base = super().cache_spec(multi_pod)
+        base["ssm"] = P(None, dp, "model", None)
+        base["conv"] = P(None, dp, None, "model")
+        return base

@@ -1,0 +1,131 @@
+"""Selective SSM (Mamba/S6) mixer — the SSM half of Hymba's hybrid heads.
+
+Chunked selective scan: outer ``lax.scan`` over time chunks carries the
+recurrent state [B, di, N]; inside a chunk the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` runs as an associative scan.  Per-chunk
+materialization is [B, ck, di, N] — with di sharded over the model axis
+this stays inside the activation budget at train_4k, while a full-length
+associative scan would not (the reason real Mamba ships a fused kernel;
+the chunking is the TPU-idiomatic equivalent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mamba_init(key, cfg, layers: int) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    r = max(1, d // 16)              # dt low-rank
+    kw = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    shp = (lambda *s: (layers,) + s)
+    return {
+        "w_in": jax.random.normal(ks[0], shp(d, 2 * di), jnp.float32) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], shp(kw, di), jnp.float32) * 0.2,
+        "w_b": jax.random.normal(ks[2], shp(di, n), jnp.float32) * di ** -0.5,
+        "w_c": jax.random.normal(ks[3], shp(di, n), jnp.float32) * di ** -0.5,
+        "w_dt1": jax.random.normal(ks[4], shp(di, r), jnp.float32) * di ** -0.5,
+        "w_dt2": jax.random.normal(ks[5], shp(r, di), jnp.float32) * r ** -0.5,
+        "dt_bias": jnp.zeros(shp(di), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (layers, di, n))),
+        "d_skip": jnp.ones(shp(di), jnp.float32),
+        "w_out": jax.random.normal(ks[6], shp(di, d), jnp.float32)
+                 * di ** -0.5 / max(cfg.n_layers, 1) ** 0.5,
+    }
+
+
+def _causal_conv(x, conv_w, conv_state=None):
+    """x [B,S,di]; conv_w [K,di] depthwise. conv_state [B,K-1,di] for
+    decode continuity; returns (y, new_state)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, S+K-1, di]
+    y = sum(xp[:, i:i + x.shape[1], :] * conv_w[i][None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y, new_state
+
+
+def _ssm_inputs(p, xc, dtype):
+    """Per-step SSM coefficients from the (conv'd) input."""
+    xf = xc.astype(jnp.float32)
+    bt = xf @ p["w_b"].astype(jnp.float32)            # [B,S,N]
+    ct = xf @ p["w_c"].astype(jnp.float32)            # [B,S,N]
+    dt = jax.nn.softplus(
+        (xf @ p["w_dt1"].astype(jnp.float32)) @ p["w_dt2"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))           # [B,S,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))      # [di,N]
+    return bt, ct, dt, a
+
+
+def mamba_mixer(p, x, cfg, chunk: int = 256):
+    """Training/prefill path. x [B,S,D] -> (y [B,S,D], final_state, conv_state)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_ = x.dtype
+    xz = x @ p["w_in"].astype(dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(x_in, p["conv_w"].astype(dt_))
+    xc = jax.nn.silu(xc)
+    bt, ct, dt, a = _ssm_inputs(p, xc, dt_)
+
+    ck = min(chunk, s)
+    nck = s // ck if s % ck == 0 else 1
+    ck = s // nck
+    xcr = xc.astype(jnp.float32).reshape(b, nck, ck, di)
+    btr = bt.reshape(b, nck, ck, n)
+    ctr = ct.reshape(b, nck, ck, n)
+    dtr = dt.reshape(b, nck, ck, di)
+
+    @jax.checkpoint
+    def chunk_step(h, xs):
+        xck, bck, cck, dck = xs                       # [B,ck,*]
+        a_bar = jnp.exp(dck[..., None] * a)           # [B,ck,di,N]
+        b_bar = (dck * xck)[..., None] * bck[:, :, None, :]
+
+        def assoc(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_all, b_all = lax.associative_scan(assoc, (a_bar, b_bar), axis=1)
+        hs = a_all * h[:, None] + b_all               # [B,ck,di,N]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cck)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    hT, ys = lax.scan(chunk_step, h0,
+                      (xcr.transpose(1, 0, 2, 3), btr.transpose(1, 0, 2, 3),
+                       ctr.transpose(1, 0, 2, 3), dtr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(dt_), hT, conv_state
+
+
+def mamba_decode(p, x, cfg, ssm_state, conv_state):
+    """Single-token path. x [B,1,D]; ssm_state [B,di,N]; conv_state
+    [B,K-1,di] -> (y [B,1,D], new_ssm, new_conv)."""
+    dt_ = x.dtype
+    xz = x @ p["w_in"].astype(dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(x_in, p["conv_w"].astype(dt_), conv_state)
+    xc = jax.nn.silu(xc)
+    bt, ct, dt, a = _ssm_inputs(p, xc, dt_)
+    a_bar = jnp.exp(dt[:, 0, :, None] * a)            # [B,di,N]
+    b_bar = (dt[:, 0] * xc.astype(jnp.float32)[:, 0])[..., None] \
+        * bt[:, 0, None, :]
+    h = a_bar * ssm_state + b_bar
+    y = jnp.einsum("bdn,bn->bd", h, ct[:, 0])
+    y = y + xc.astype(jnp.float32)[:, 0] * p["d_skip"].astype(jnp.float32)
+    y = (y[:, None].astype(dt_) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(dt_), h, new_conv

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts LM (olmoe, dbrx) — capacity-based einsum dispatch.
+
+TPU-native MoE (Mesh-TF/Switch lineage): top-k routing builds static
+one-hot dispatch/combine tensors; expert FFNs run as one batched einsum
+over the expert axis, which is sharded over ``model`` (EP == TP axis).
+Under pjit the dispatch einsum lowers to the all-to-all that dominates
+this family's collective roofline term.
+
+Dropped tokens: capacity C = ceil(top_k * tokens/experts * capacity_factor)
+per expert; overflow tokens pass through the residual (standard).  A
+Switch-style load-balance auxiliary loss keeps the router honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.transformer import DenseLM
+
+
+def _capacity(tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(np.ceil(top_k * tokens * factor / n_experts))
+    return max(8, ((c + 7) // 8) * 8)   # pad to sublane
+
+
+def moe_apply_block(p, xt, cfg, capacity: int):
+    """One token block. xt [G, D] -> (y [G, D], aux_loss scalar)."""
+    g, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = xt.dtype
+    wire_int8 = getattr(cfg, "moe_wire_int8", False)
+
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)   # [G,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                # [G,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)        # [G,k,E]
+    flat = onehot.reshape(g * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(g, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)               # [G,k]
+    keep = pos < capacity
+
+    # dispatch [G,E,C] / combine [G,E,C]
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                            capacity, dtype=dt)                  # [G,k,C]
+    disp = jnp.einsum("gke,gkc->gec", onehot.astype(dt), pos_oh)
+    comb = jnp.einsum("gke,gkc,gk->gec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(dt)
+
+    if wire_int8:
+        # int8 wire: quantize tokens per-row BEFORE the dispatch einsum —
+        # the sharding boundary (token->expert all-to-all) then moves s8
+        # instead of bf16, halving the dominant MoE collective.  Scales
+        # ride along through a tiny second einsum.
+        scale = jnp.max(jnp.abs(xt), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        xt_q = jnp.clip(jnp.round(xt / scale), -127, 127).astype(jnp.int8)
+        ein = jnp.einsum("gec,gd->ecd", disp.astype(jnp.int8), xt_q,
+                         preferred_element_type=jnp.int32)
+        sc_ec = jnp.einsum("gec,g->ec", disp, scale[:, 0])
+        expert_in = (ein.astype(jnp.float32)
+                     * sc_ec[..., None].astype(jnp.float32)).astype(dt)
+    else:
+        expert_in = jnp.einsum("gec,gd->ecd", disp, xt)          # [E,C,D]
+    gate_w = jax.nn.silu(jnp.einsum(
+        "ecd,edf->ecf", expert_in, p["w_gate"].astype(dt)))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"].astype(dt))
+    expert_out = jnp.einsum("ecf,efd->ecd", gate_w * up,
+                            p["w_down"].astype(dt))
+    y = jnp.einsum("gec,ecd->gd", comb, expert_out)
+
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(onehot.sum(axis=1).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens / k * frac_probs)
+    return y, aux
+
+
+def moe_apply(p, x, cfg, capacity: int = 0, block_tokens: int = 1024):
+    """x [B,S,D] -> (y, aux).  Tokens are processed in blocks of
+    ~``block_tokens`` — the one-hot dispatch einsum is O(G * E*C * D)
+    with C ∝ G/E, i.e. *quadratic* in unblocked G; blocking restores
+    linearity (the grouped-MoE formulation).  Capacity is per block."""
+    b, s, d = x.shape
+    g = b * s
+    sb = max(1, min(s, block_tokens // max(b, 1)))
+    nb = s // sb if s % sb == 0 else 1
+    if nb <= 1:
+        cap = _capacity(g, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+        y, aux = moe_apply_block(p, x.reshape(g, d), cfg, cap)
+        return y.reshape(b, s, d), aux
+    cap = _capacity(b * sb, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+    xb = x.reshape(b, nb, sb, d).transpose(1, 0, 2, 3).reshape(nb, b * sb, d)
+
+    def step(aux, xt):
+        y, a = moe_apply_block(p, xt, cfg, cap)
+        return aux + a, y
+
+    aux, ys = jax.lax.scan(step, jnp.float32(0), xb)
+    y = ys.reshape(nb, b, sb, d).transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, aux / nb
+
+
+class MoELM(DenseLM):
+    family = "moe"
+
+    def _init_layers(self, key) -> dict:
+        cfg = self.cfg
+        ka, km = jax.random.split(key)
+        lcount, d, f, e = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+        ks = jax.random.split(km, 4)
+        p = {
+            "ln1": jnp.zeros((lcount, d), jnp.float32),
+            "ln2": jnp.zeros((lcount, d), jnp.float32),
+            "attn": L.init_attn(ka, cfg, layers=lcount),
+            "mlp": {
+                "router": jax.random.normal(ks[0], (lcount, d, e),
+                                            jnp.float32) * d ** -0.5,
+                "w_gate": jax.random.normal(ks[1], (lcount, e, d, f),
+                                            jnp.float32) * d ** -0.5,
+                "w_up": jax.random.normal(ks[2], (lcount, e, d, f),
+                                          jnp.float32) * d ** -0.5,
+                "w_down": jax.random.normal(ks[3], (lcount, e, f, d),
+                                            jnp.float32)
+                          * (f ** -0.5) / max(lcount, 1) ** 0.5,
+            },
+        }
+        return p
+
+    def _ffn(self, p_l, h, *_):
+        y, _aux = moe_apply(p_l["mlp"], h, self.cfg)
+        return y
+
+    def loss(self, params, batch, vocab_chunk: int = 8):
+        # Wrap the dense loss; add router aux losses accumulated via a
+        # functional pass (recompute with a scan carrying the aux sum).
+        cfg = self.cfg
+        x, qpos = self._embed_inputs(params, batch)
+
+        def body(carry, xs):
+            p_l, w_l = xs
+            h, aux = carry
+            h = self._constrain_act(h)
+            h2 = L.rms_norm(h, p_l["ln1"])
+            o, _ = self._mixer_train(p_l, w_l, h2, qpos)
+            h = h + o
+            hn = L.rms_norm(h, p_l["ln2"])
+            y, a = moe_apply(p_l["mlp"], hn, cfg)
+            return (h + y, aux + a), None
+
+        body_fn = body
+        if cfg.remat:
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                   (params["layers"], self.windows))
+
+        targets = batch["labels"]
+        b, s = targets.shape
+        nc = vocab_chunk if s % vocab_chunk == 0 else 1
+        xc = x.reshape(b, nc, s // nc, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xx, tt = xs
+            logits = L.unembed(params, xx, cfg)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tt, 0)[..., None], axis=-1)[..., 0]
+            valid = (tt >= 0)
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(chunk_loss,
+                                     (jnp.float32(0), jnp.int32(0)), (xc, tc))
+        ce = tot / jnp.maximum(cnt, 1)
+        aux_mean = aux / cfg.n_layers
+        loss = ce + cfg.router_aux_coef * aux_mean
+        return loss, {"loss": loss, "ce": ce, "aux": aux_mean, "tokens": cnt}
+
+    def _layer_spec(self, fs) -> dict:
+        s = super()._layer_spec(fs)
+        s["mlp"] = {
+            "router": P(None, None, None),
+            "w_gate": P(None, "model", fs, None),
+            "w_up": P(None, "model", fs, None),
+            "w_down": P(None, "model", None, fs),
+        }
+        s.pop("ln1_post", None)
+        s.pop("ln2_post", None)
+        return s
+
+    def param_spec(self) -> dict:
+        spec = super().param_spec()
+        if self.strip_tp:
+            # strip_tp removes attention TP but expert parallelism stays
+            # on the model axis (the experts are the point of the axis)
+            fs = self._fsdp_ax()
+            spec["layers"]["mlp"] = {
+                "router": P(None, None, None),
+                "w_gate": P(None, "model", fs, None),
+                "w_up": P(None, "model", fs, None),
+                "w_down": P(None, "model", None, fs),
+            }
+        return spec

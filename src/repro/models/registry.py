@@ -1,0 +1,26 @@
+"""Architecture registry: config.family -> Model class."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "dense":
+        from repro.models.transformer import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLM
+        return VLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,328 @@
+"""Dense decoder-only LM (llama/mistral/gemma2 family) + the base Model
+API every architecture implements:
+
+    init(key) -> params                       (stacked-layer pytree)
+    forward(params, batch) -> logits          (teacher-forced, training)
+    loss(params, batch) -> (scalar, metrics)  (chunked-vocab CE)
+    init_cache(batch, cache_len) -> cache
+    prefill(params, batch) -> (last_logits, cache)
+    decode_step(params, tokens, cache, index) -> (logits, cache)
+    param_spec() / cache_spec() -> PartitionSpec pytrees (fsdp-aware)
+    input_specs(shape) -> ShapeDtypeStructs for the dry-run
+
+Layers are stacked on a leading L axis and executed with ``lax.scan``
+(+ optional full remat): one compiled block regardless of depth — the
+standard production-JAX pattern for compile time and activation memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import layers as L
+
+DP = ("pod", "data")   # canonical data-parallel mesh axes (pod may be absent)
+
+
+def dp_axes(multi_pod: bool = True):
+    return DP if multi_pod else ("data",)
+
+
+class DenseLM:
+    family = "dense"
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.windows = L.layer_windows(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        # Megatron-style sequence parallelism for the residual stream:
+        # when a launcher sets act_spec = P(dp, 'model', None), the
+        # layer-scan carry (the tensor remat must save per layer) is
+        # sharded over the model axis on the sequence dim.  XLA inserts
+        # the all-gather before attention and the reduce-scatter after —
+        # the same ring bytes as the TP all-reduce it subsumes, for a
+        # TP-fold smaller activation footprint.
+        self.act_spec = None
+        # FSDP shard axes — the launcher widens this to ('data', 'pod')
+        # on multi-pod meshes so optimizer state scales with the fleet
+        self.fsdp_axes = ("data",)
+        # strip_tp=True removes tensor parallelism from the param specs
+        # (the mesh's model axis is then repurposed as extra FSDP/DP) —
+        # the right production config for small models on a fixed mesh
+        self.strip_tp = False
+        # ring attention (context parallelism): set by the launcher with
+        # the concrete mesh; requires static window (cfg.window == 0)
+        self.ring_mesh = None
+        self.ring_batch_axes = ("data",)
+
+    def _constrain_act(self, x):
+        if self.act_spec is not None and x.ndim >= 3:
+            return jax.lax.with_sharding_constraint(x, self.act_spec)
+        return x
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_layers = jax.random.split(key)
+        params = L.init_embed(k_embed, cfg)
+        params["layers"] = self._init_layers(k_layers)
+        return params
+
+    def _init_layers(self, key) -> dict:
+        cfg = self.cfg
+        ka, km = jax.random.split(key)
+        p = {
+            "ln1": jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32),
+            "ln2": jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32),
+            "attn": L.init_attn(ka, cfg, layers=cfg.n_layers),
+            "mlp": L.init_mlp(km, cfg, layers=cfg.n_layers),
+        }
+        if cfg.post_norms:
+            p["ln1_post"] = jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32)
+            p["ln2_post"] = jnp.zeros((cfg.n_layers, cfg.d_model), jnp.float32)
+        return p
+
+    # ------------------------------------------------------------ block
+    def _ffn(self, p_l, h, *_):
+        return L.mlp_apply(p_l["mlp"], h, self.cfg.mlp_act)
+
+    def _mixer_train(self, p_l, window, h, qpos):
+        cfg = self.cfg
+        q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+        q = L.rope(q, qpos, cfg.rope_theta)
+        k = L.rope(k, qpos, cfg.rope_theta)
+        if cfg.attn_impl == "ring" and self.ring_mesh is not None:
+            assert cfg.window == 0, "ring path needs a static window"
+            o = L.attn_ring(q, k, v, mesh=self.ring_mesh,
+                            batch_axes=self.ring_batch_axes,
+                            causal=True, softcap=cfg.attn_logit_softcap,
+                            chunk_k=min(cfg.attn_chunk, 512))
+        else:
+            o = L.attention_output(q, k, v, qpos, qpos, cfg.attn_impl,
+                                   causal=True, window=window,
+                                   softcap=cfg.attn_logit_softcap,
+                                   chunk=cfg.attn_chunk)
+        return L.out_proj(p_l["attn"], o, h.dtype), (k, v)
+
+    def _block_train(self, p_l, window, x, qpos, collect_kv=False):
+        cfg = self.cfg
+        h = L.rms_norm(x, p_l["ln1"])
+        o, kv = self._mixer_train(p_l, window, h, qpos)
+        if cfg.post_norms:
+            o = L.rms_norm(o, p_l["ln1_post"])
+        x = x + o
+        h2 = L.rms_norm(x, p_l["ln2"])
+        m = self._ffn(p_l, h2, qpos)
+        if cfg.post_norms:
+            m = L.rms_norm(m, p_l["ln2_post"])
+        x = x + m
+        return x, (kv if collect_kv else None)
+
+    def _block_decode(self, p_l, window, x, k_cache, v_cache, index):
+        cfg = self.cfg
+        h = L.rms_norm(x, p_l["ln1"])
+        q, k1, v1 = L.qkv_proj(p_l["attn"], h, cfg)
+        pos = jnp.full((1,), index, jnp.int32)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k1 = L.rope(k1, pos, cfg.rope_theta)
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k1.astype(k_cache.dtype), index, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v1.astype(v_cache.dtype), index, axis=1)
+        o = L.attn_decode(q, k_cache, v_cache, index, causal=True,
+                          window=window, softcap=cfg.attn_logit_softcap)
+        o = L.out_proj(p_l["attn"], o, x.dtype)
+        if cfg.post_norms:
+            o = L.rms_norm(o, p_l["ln1_post"])
+        x = x + o
+        h2 = L.rms_norm(x, p_l["ln2"])
+        m = self._ffn(p_l, h2, pos)
+        if cfg.post_norms:
+            m = L.rms_norm(m, p_l["ln2_post"])
+        x = x + m
+        return x, k_cache, v_cache
+
+    # ---------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch):
+        tokens = batch["tokens"]
+        x = L.embed_tokens(params, tokens, self.cfg, self.dtype)
+        qpos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        return x, qpos
+
+    def _scan_layers(self, params, x, qpos, collect_kv=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            p_l, w_l = xs
+            carry = self._constrain_act(carry)
+            out, kv = self._block_train(p_l, w_l, carry, qpos,
+                                        collect_kv=collect_kv)
+            return self._constrain_act(out), kv
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            x, kvs = lax.scan(body, x, (params["layers"], self.windows))
+        else:
+            kvs = []
+            for i in range(cfg.n_layers):
+                p_l = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                x, kv = body(x, (p_l, self.windows[i]))
+                kvs.append(kv)
+            kvs = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kvs)
+                   if collect_kv else None)
+        return x, kvs
+
+    def forward(self, params, batch):
+        x, qpos = self._embed_inputs(params, batch)
+        x, _ = self._scan_layers(params, x, qpos)
+        return L.unembed(params, x, self.cfg)
+
+    # ------------------------------------------------------------- loss
+    def loss(self, params, batch, vocab_chunk: int = 8):
+        """Next-token CE.  The vocab projection is the memory hot spot at
+        train time (B*S*V logits); chunk over the sequence so only
+        S/vocab_chunk of the logits are ever live (remat recomputes)."""
+        cfg = self.cfg
+        x, qpos = self._embed_inputs(params, batch)
+        x, _ = self._scan_layers(params, x, qpos)
+        targets = batch["labels"]            # [B,S] (-1 = masked)
+        b, s = targets.shape
+        nc = vocab_chunk if s % vocab_chunk == 0 else 1
+        xc = x.reshape(b, nc, s // nc, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xx, tt = xs
+            logits = L.unembed(params, xx, cfg)          # [b, s/nc, V] f32
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tt, 0)[..., None], axis=-1)[..., 0]
+            valid = (tt >= 0)
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = lax.scan(chunk_loss, (jnp.float32(0), jnp.int32(0)),
+                                 (xc, tc))
+        loss = tot / jnp.maximum(cnt, 1)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        shp = (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads,
+               cfg.d_head)
+        return {"k": jnp.zeros(shp, self.dtype),
+                "v": jnp.zeros(shp, self.dtype)}
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """Teacher prefill: run the full prompt, return (last_logits, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        x, qpos = self._embed_inputs(params, batch)
+        x, kvs = self._scan_layers(params, x, qpos, collect_kv=True)
+        logits = L.unembed(params, x[:, -1:, :], cfg)
+        k, v = kvs
+        pad = cache_len - s
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, {"k": k.astype(self.dtype), "v": v.astype(self.dtype)}
+
+    def decode_step(self, params, tokens, cache, index):
+        """tokens [B,1]; index: scalar position of the new token."""
+        x = L.embed_tokens(params, tokens, self.cfg, self.dtype)
+
+        def body(carry, xs):
+            p_l, w_l, k_c, v_c = xs
+            out, k_c, v_c = self._block_decode(p_l, w_l, carry, k_c, v_c,
+                                               index)
+            return out, (k_c, v_c)
+
+        x, (k_new, v_new) = lax.scan(
+            body, x, (params["layers"], self.windows, cache["k"], cache["v"]))
+        logits = L.unembed(params, x, self.cfg)
+        return logits, {"k": k_new, "v": v_new}
+
+    # ------------------------------------------------------- shardings
+    def _fsdp_ax(self):
+        if not self.cfg.fsdp:
+            return None
+        axes = tuple(self.fsdp_axes)
+        return axes if len(axes) > 1 else axes[0]
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        fs = self._fsdp_ax()
+        spec = {
+            "embedding": P("model", fs),
+            "final_norm": P(None),
+            "layers": self._layer_spec(fs),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = P(fs, "model")
+        if self.strip_tp:
+            spec = jax.tree_util.tree_map(
+                lambda sp: P(*[None if e == "model" else e for e in sp]),
+                spec, is_leaf=lambda x: isinstance(x, P))
+        return spec
+
+    def _layer_spec(self, fs) -> dict:
+        cfg = self.cfg
+        s = {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": {
+                "wq": P(None, fs, "model"),
+                "wk": P(None, fs, "model"),
+                "wv": P(None, fs, "model"),
+                "wo": P(None, "model", fs),
+            },
+            "mlp": {
+                "w_gate": P(None, fs, "model"),
+                "w_up": P(None, fs, "model"),
+                "w_down": P(None, "model", fs),
+            },
+        }
+        if cfg.post_norms:
+            s["ln1_post"] = P(None, None)
+            s["ln2_post"] = P(None, None)
+        return s
+
+    def cache_spec(self, multi_pod: bool = True) -> dict:
+        dp = dp_axes(multi_pod)
+        return {"k": P(None, dp, None, None, "model"),
+                "v": P(None, dp, None, None, "model")}
+
+    # ------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeSpec, multi_pod: bool = True) -> dict:
+        """ShapeDtypeStructs (+ PartitionSpecs) for the dry-run."""
+        b, s = shape.global_batch, shape.seq_len
+        dp = dp_axes(multi_pod)
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            return {
+                "arrays": {"tokens": tok,
+                           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)},
+                "specs": {"tokens": P(dp, None), "labels": P(dp, None)},
+            }
+        if shape.kind == "prefill":
+            return {"arrays": {"tokens": tok},
+                    "specs": {"tokens": P(dp, None)}}
+        if shape.kind == "decode":
+            return {
+                "arrays": {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+                "specs": {"tokens": P(dp, None)},
+            }
+        raise ValueError(shape.kind)

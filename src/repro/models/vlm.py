@@ -1,0 +1,106 @@
+"""PaliGemma-style VLM backbone: patch-embedding prefix + Gemma decoder.
+
+Frontend STUB per the assignment: ``input_specs`` supplies precomputed
+SigLIP patch embeddings [B, 256, d_model] which are prepended to the
+token embeddings.  Attention is prefix-LM: bidirectional over the image
+prefix, causal over text (MQA, kv=1).  Loss is computed on text
+positions only (labels for prefix positions are -1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeSpec
+from repro.models import layers as L
+from repro.models.transformer import DenseLM, dp_axes
+
+
+class VLM(DenseLM):
+    family = "vlm"
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tok = L.embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        patches = batch["patch_embeds"].astype(self.dtype)
+        x = jnp.concatenate([patches, tok], axis=1)
+        qpos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        return x, qpos
+
+    def _mixer_train(self, p_l, window, h, qpos):
+        cfg = self.cfg
+        q, k, v = L.qkv_proj(p_l["attn"], h, cfg)
+        q = L.rope(q, qpos, cfg.rope_theta)
+        k = L.rope(k, qpos, cfg.rope_theta)
+        o = L.attention_output(q, k, v, qpos, qpos, cfg.attn_impl,
+                               causal=True, window=window,
+                               softcap=cfg.attn_logit_softcap,
+                               chunk=cfg.attn_chunk,
+                               prefix=cfg.prefix_len)
+        return L.out_proj(p_l["attn"], o, h.dtype), (k, v)
+
+    def forward(self, params, batch):
+        logits = super().forward(params, batch)
+        return logits[:, self.cfg.prefix_len:]      # text positions only
+
+    def loss(self, params, batch, vocab_chunk: int = 8):
+        cfg = self.cfg
+        x, qpos = self._embed_inputs(params, batch)
+        x, _ = self._scan_layers(params, x, qpos)
+        x = x[:, cfg.prefix_len:]
+        targets = batch["labels"]                   # [B, S_text]
+        b, s = targets.shape
+        nc = vocab_chunk if s % vocab_chunk == 0 else 1
+        xc = x.reshape(b, nc, s // nc, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xx, tt = xs
+            logits = L.unembed(params, xx, cfg)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tt, 0)[..., None], axis=-1)[..., 0]
+            valid = (tt >= 0)
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_loss, (jnp.float32(0), jnp.int32(0)), (xc, tc))
+        loss = tot / jnp.maximum(cnt, 1)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # serving: the cache covers prefix + text; prefill consumes both.
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        s_total = cfg.prefix_len + batch["tokens"].shape[1]
+        cache_len = cache_len or s_total
+        x, qpos = self._embed_inputs(params, batch)
+        x, kvs = self._scan_layers(params, x, qpos, collect_kv=True)
+        logits = L.unembed(params, x[:, -1:, :], cfg)
+        k, v = kvs
+        pad = cache_len - s_total
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, {"k": k.astype(self.dtype), "v": v.astype(self.dtype)}
+
+    def input_specs(self, shape: ShapeSpec, multi_pod: bool = True) -> dict:
+        cfg = self.cfg
+        b = shape.global_batch
+        dp = dp_axes(multi_pod)
+        base = super().input_specs(shape, multi_pod)
+        if shape.kind in ("train", "prefill"):
+            # text + prefix together honor the cell's seq_len budget
+            s_text = shape.seq_len - cfg.prefix_len
+            base["arrays"]["tokens"] = jax.ShapeDtypeStruct(
+                (b, s_text), jnp.int32)
+            if shape.kind == "train":
+                base["arrays"]["labels"] = jax.ShapeDtypeStruct(
+                    (b, s_text), jnp.int32)
+            base["arrays"]["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.float32)
+            base["specs"]["patch_embeds"] = P(dp, None, None)
+        return base

@@ -1,0 +1,279 @@
+"""xLSTM LM: alternating mLSTM / sLSTM blocks (arXiv:2405.04517).
+
+Layer layout follows the assigned 12-layer config as 6 scanned *pairs*
+(mLSTM then sLSTM) — pairing keeps ``lax.scan`` over depth legal even
+though the two block types differ.  d_ff=0: blocks are pure token mixers
+with up/down projections, no separate FFN.
+
+* mLSTM: matrix memory C in [B,H,dh,dh] with stabilized exponential
+  gating — h_t = (C_t q_t) / max(|n_t.q_t|, 1).  Implemented as a time
+  scan (the chunkwise-parallel form is a §Perf candidate, the recurrence
+  is the numerics oracle).
+* sLSTM: scalar memory per channel with diagonal recurrent gate weights
+  and the same exp-gating stabilizer.  Inherently sequential.
+
+Recurrent state is O(1) per token -> the arch runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import layers as L
+from repro.models.transformer import DenseLM, dp_axes
+
+
+def _chunked_time_scan(step, carry, xs, tc: int = 128):
+    """lax.scan over time with gradient checkpointing every ``tc`` steps:
+    backward recomputes within a chunk instead of saving the (large)
+    recurrent carry at every timestep — for the mLSTM matrix memory the
+    per-step save is B*H*dh^2 f32, i.e. tens of GB over a 4k sequence."""
+    T = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if T <= tc:
+        return jax.lax.scan(step, carry, xs)
+    nc = T // tc if T % tc == 0 else 1
+    if nc <= 1:
+        return jax.lax.scan(step, carry, xs)
+    xs_c = jax.tree_util.tree_map(
+        lambda x: x.reshape(nc, tc, *x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(chunk, carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape(nc * tc, *y.shape[2:]), ys)
+    return carry, ys
+
+
+class XLSTMLM(DenseLM):
+    family = "ssm"
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        assert cfg.n_layers % 2 == 0
+        self.n_pairs = cfg.n_layers // 2
+        self.di = cfg.ssm_expand * cfg.d_model
+        self.dh = self.di // cfg.n_heads
+
+    # ------------------------------------------------------------- params
+    def _init_layers(self, key) -> dict:
+        cfg = self.cfg
+        d, di, h = cfg.d_model, self.di, cfg.n_heads
+        pr = self.n_pairs
+        ks = jax.random.split(key, 12)
+        shp = (lambda *s: (pr,) + s)
+        return {
+            "m_ln": jnp.zeros(shp(d), jnp.float32),
+            "m_up": jax.random.normal(ks[0], shp(d, 2 * di)) * d ** -0.5,
+            "m_q": jax.random.normal(ks[1], shp(di, di)) * di ** -0.5,
+            "m_k": jax.random.normal(ks[2], shp(di, di)) * di ** -0.5,
+            "m_v": jax.random.normal(ks[3], shp(di, di)) * di ** -0.5,
+            "m_gates": jax.random.normal(ks[4], shp(di, 2 * h)) * di ** -0.5,
+            "m_down": jax.random.normal(ks[5], shp(di, d))
+                      * di ** -0.5 / max(cfg.n_layers, 1) ** 0.5,
+            "s_ln": jnp.zeros(shp(d), jnp.float32),
+            "s_gates": jax.random.normal(ks[6], shp(d, 4 * di)) * d ** -0.5,
+            "s_rec": jax.random.normal(ks[7], shp(4, di)) * 0.1,
+            "s_down": jax.random.normal(ks[8], shp(di, d))
+                      * di ** -0.5 / max(cfg.n_layers, 1) ** 0.5,
+        }
+
+    # ------------------------------------------------------- mLSTM block
+    def _mlstm(self, p, x, state):
+        """x [B,S,D]; state (C [B,H,dh,dh], n [B,H,dh], m [B,H]).
+        Returns (out [B,S,D], new_state)."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        h_, dh = cfg.n_heads, self.dh
+        dt = x.dtype
+        hn = L.rms_norm(x, p["m_ln"])
+        up = hn @ p["m_up"].astype(dt)
+        xm, z = jnp.split(up, 2, axis=-1)                       # [B,S,di]
+        q = (xm @ p["m_q"].astype(dt)).reshape(b, s, h_, dh)
+        k = (xm @ p["m_k"].astype(dt)).reshape(b, s, h_, dh) * dh ** -0.5
+        v = (xm @ p["m_v"].astype(dt)).reshape(b, s, h_, dh)
+        gates = (xm @ p["m_gates"].astype(dt)).astype(jnp.float32)
+        i_raw, f_raw = jnp.split(gates.reshape(b, s, h_, 2), 2, axis=-1)
+        i_raw, f_raw = i_raw[..., 0], f_raw[..., 0]             # [B,S,H]
+        f_log = jax.nn.log_sigmoid(f_raw)
+
+        def step(carry, xs):
+            C, n, m = carry
+            qt, kt, vt, it, ft = xs                             # [B,H,*]
+            m_new = jnp.maximum(ft + m, it)
+            decay = jnp.exp(ft + m - m_new)[..., None]
+            inp = jnp.exp(it - m_new)[..., None]
+            kf = kt.astype(jnp.float32)
+            vf = vt.astype(jnp.float32)
+            C = decay[..., None] * C + inp[..., None] * \
+                (vf[..., :, None] * kf[..., None, :])           # [B,H,dh,dh]
+            n = decay * n + inp * kf
+            qf = qt.astype(jnp.float32)
+            num = jnp.einsum("bhij,bhj->bhi", C, qf)
+            den = jnp.maximum(jnp.abs(jnp.sum(n * qf, axis=-1)), 1.0)
+            h_t = num / den[..., None]                          # [B,H,dh]
+            return (C, n, m_new), h_t
+
+        xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), i_raw.transpose(1, 0, 2),
+              f_log.transpose(1, 0, 2))
+        state, hs = _chunked_time_scan(step, state, xs)
+        hs = hs.transpose(1, 0, 2, 3).reshape(b, s, self.di).astype(dt)
+        out = (hs * jax.nn.silu(z)) @ p["m_down"].astype(dt)
+        return out, state
+
+    # ------------------------------------------------------- sLSTM block
+    def _slstm(self, p, x, state):
+        """state (c, n, m, h_prev) each [B, di]."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        dt = x.dtype
+        hn = L.rms_norm(x, p["s_ln"])
+        gates = (hn @ p["s_gates"].astype(dt)).astype(jnp.float32)
+        zg, ig, fg, og = jnp.split(gates.reshape(b, s, 4, self.di), 4, axis=2)
+        zg, ig, fg, og = zg[:, :, 0], ig[:, :, 0], fg[:, :, 0], og[:, :, 0]
+        rec = p["s_rec"].astype(jnp.float32)                    # [4, di]
+
+        def step(carry, xs):
+            c, n, m, h_prev = carry
+            z_t, i_t, f_t, o_t = xs                             # [B,di]
+            z_t = jnp.tanh(z_t + rec[0] * h_prev)
+            i_t = i_t + rec[1] * h_prev
+            f_t = jax.nn.log_sigmoid(f_t + rec[2] * h_prev)
+            o_t = jax.nn.sigmoid(o_t + rec[3] * h_prev)
+            m_new = jnp.maximum(f_t + m, i_t)
+            c = jnp.exp(f_t + m - m_new) * c + jnp.exp(i_t - m_new) * z_t
+            n = jnp.exp(f_t + m - m_new) * n + jnp.exp(i_t - m_new)
+            h_t = o_t * c / jnp.maximum(n, 1.0)
+            return (c, n, m_new, h_t), h_t
+
+        xs = (zg.transpose(1, 0, 2), ig.transpose(1, 0, 2),
+              fg.transpose(1, 0, 2), og.transpose(1, 0, 2))
+        state, hs = _chunked_time_scan(step, state, xs)
+        hs = hs.transpose(1, 0, 2).astype(dt)                   # [B,S,di]
+        out = hs @ p["s_down"].astype(dt)
+        return out, state
+
+    # ------------------------------------------------------------ states
+    def _zero_pair_state(self, b):
+        cfg = self.cfg
+        h_, dh, di = cfg.n_heads, self.dh, self.di
+        pr = self.n_pairs
+        return {
+            "mC": jnp.zeros((pr, b, h_, dh, dh), jnp.float32),
+            "mn": jnp.zeros((pr, b, h_, dh), jnp.float32),
+            "mm": jnp.full((pr, b, h_), -1e30, jnp.float32),
+            "sc": jnp.zeros((pr, b, di), jnp.float32),
+            "sn": jnp.zeros((pr, b, di), jnp.float32),
+            "sm": jnp.full((pr, b, di), -1e30, jnp.float32),
+            "sh": jnp.zeros((pr, b, di), jnp.float32),
+        }
+
+    # ----------------------------------------------------------- forward
+    def _run(self, params, x, state):
+        def body(carry, xs):
+            p_l, st = xs
+            carry = self._constrain_act(carry)
+            m_out, m_state = self._mlstm(p_l, carry, (st["mC"], st["mn"],
+                                                      st["mm"]))
+            carry = carry + m_out
+            s_out, s_state = self._slstm(p_l, carry, (st["sc"], st["sn"],
+                                                      st["sm"], st["sh"]))
+            carry = carry + s_out
+            new = {"mC": m_state[0], "mn": m_state[1], "mm": m_state[2],
+                   "sc": s_state[0], "sn": s_state[1], "sm": s_state[2],
+                   "sh": s_state[3]}
+            return carry, new
+
+        if self.cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_state = lax.scan(body, x, (params["layers"], state))
+        return x, new_state
+
+    def forward(self, params, batch):
+        x = L.embed_tokens(params, batch["tokens"], self.cfg, self.dtype)
+        x, _ = self._run(params, x, self._zero_pair_state(x.shape[0]))
+        return L.unembed(params, x, self.cfg)
+
+    def loss(self, params, batch, vocab_chunk: int = 8):
+        # reuse the dense chunked-CE via a tiny adapter
+        cfg = self.cfg
+        x = L.embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        x, _ = self._run(params, x, self._zero_pair_state(x.shape[0]))
+        return self._ce_from_hidden(params, x, batch["labels"], vocab_chunk)
+
+    def _ce_from_hidden(self, params, x, targets, vocab_chunk):
+        cfg = self.cfg
+        b, s = targets.shape
+        nc = vocab_chunk if s % vocab_chunk == 0 else 1
+        xc = x.reshape(b, nc, s // nc, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xx, tt = xs
+            logits = L.unembed(params, xx, cfg)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(tt, 0)[..., None], axis=-1)[..., 0]
+            valid = (tt >= 0)
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + ce.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = lax.scan(chunk_loss, (jnp.float32(0), jnp.int32(0)),
+                                 (xc, tc))
+        loss = tot / jnp.maximum(cnt, 1)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch_size: int, cache_len: int) -> dict:
+        # recurrent states only — O(1) in cache_len (the long_500k story)
+        return self._zero_pair_state(batch_size)
+
+    def prefill(self, params, batch, cache_len=None):
+        x = L.embed_tokens(params, batch["tokens"], self.cfg, self.dtype)
+        x, state = self._run(params, x,
+                             self._zero_pair_state(x.shape[0]))
+        logits = L.unembed(params, x[:, -1:, :], self.cfg)
+        return logits, state
+
+    def decode_step(self, params, tokens, cache, index):
+        x = L.embed_tokens(params, tokens, self.cfg, self.dtype)
+        x, new_state = self._run(params, x, cache)
+        logits = L.unembed(params, x, self.cfg)
+        return logits, new_state
+
+    # ------------------------------------------------------- shardings
+    def _layer_spec(self, fs) -> dict:
+        return {
+            "m_ln": P(None, None),
+            "m_up": P(None, fs, "model"),
+            "m_q": P(None, fs, "model"),
+            "m_k": P(None, fs, "model"),
+            "m_v": P(None, fs, "model"),
+            "m_gates": P(None, "model", None),
+            "m_down": P(None, "model", fs),
+            "s_ln": P(None, None),
+            "s_gates": P(None, fs, "model"),
+            "s_rec": P(None, None, "model"),
+            "s_down": P(None, "model", fs),
+        }
+
+    def cache_spec(self, multi_pod: bool = True) -> dict:
+        dp = dp_axes(multi_pod)
+        # shard the (large) per-head state dim, not the tiny head count
+        return {
+            "mC": P(None, dp, None, "model", None),
+            "mn": P(None, dp, None, "model"),
+            "mm": P(None, dp, None),
+            "sc": P(None, dp, "model"),
+            "sn": P(None, dp, "model"),
+            "sm": P(None, dp, "model"),
+            "sh": P(None, dp, "model"),
+        }

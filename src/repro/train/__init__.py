@@ -1,0 +1,3 @@
+from repro.train.optimizer import AdamWConfig, init_opt_state, adamw_update
+from repro.train.train_step import make_train_step, TrainState
+from repro.train.serve_step import make_prefill_step, make_decode_step

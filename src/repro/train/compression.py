@@ -1,0 +1,85 @@
+"""Gradient compression for the slow (cross-pod) link.
+
+The paper's hybrid-cloud story has a slow on-prem<->GCP pipe; the TPU
+analogue is the cross-pod DCI, which carries only the data-parallel
+gradient reduction.  Two standard compressors, both with error feedback
+(the residual is re-added next step, preserving convergence):
+
+* int8 per-tensor quantization (8x over f32, 2x over bf16 wire format)
+* top-k magnitude sparsification (k as a fraction)
+
+Applied grad -> compress -> decompress around the pod-axis reduction;
+in single-host simulation this is numerically identical to compressing
+the wire format, which is what tests/test_compression.py verifies
+(convergence within tolerance of the uncompressed run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "int8"        # int8 | topk | none
+    topk_fraction: float = 0.05
+    error_feedback: bool = True
+
+
+def init_error_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(g, frac: float):
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(jnp.float32)
+
+
+def compress_grads(grads, err_state, cfg: CompressionConfig):
+    """Returns (wire_grads, new_err_state, stats).
+
+    wire_grads are the values that would cross the slow link (already
+    decompressed back to f32 — compression error is thereby applied);
+    err_state accumulates what was lost for next-step feedback.
+    """
+    if cfg.kind == "none":
+        return grads, err_state, {"compression_ratio": 1.0}
+
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if cfg.error_feedback:
+            gf = gf + e
+        if cfg.kind == "int8":
+            q, scale = _quantize_int8(gf)
+            wire = _dequantize_int8(q, scale)
+        elif cfg.kind == "topk":
+            mask = _topk_mask(gf, cfg.topk_fraction)
+            wire = gf * mask
+        else:
+            raise ValueError(cfg.kind)
+        new_e = (gf - wire) if cfg.error_feedback else e
+        return wire.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    wire = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    ratio = 4.0 if cfg.kind == "int8" else 1.0 / max(cfg.topk_fraction, 1e-9)
+    return wire, new_err, {"compression_ratio": ratio}

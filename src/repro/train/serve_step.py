@@ -1,0 +1,39 @@
+"""Serving step factories: prefill and single-token decode.
+
+Both are pure functions for jit/AOT:  decode is
+(params, tokens, cache, index) -> (logits, cache) — the function the
+``decode_32k`` / ``long_500k`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, cache_len: int):
+        return model.prefill(params, batch, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, cache, index):
+        return model.decode_step(params, tokens, cache, index)
+    return decode_step
+
+
+def greedy_generate(model, params, batch, steps: int, cache_len: int):
+    """Greedy decoding loop (host loop; each step jit-compiled once).
+    Returns generated token array [B, steps]."""
+    logits, cache = model.prefill(params, batch, cache_len=cache_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    start = batch["tokens"].shape[1]
+    if getattr(model.cfg, "prefix_len", 0):
+        start += model.cfg.prefix_len
+    out = [tok]
+    step_fn = jax.jit(model.decode_step)
+    for i in range(steps - 1):
+        logits, cache = step_fn(params, tok, cache, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.utils import tree
+from repro.utils import hlo
+from repro.utils import roofline

@@ -1,0 +1,120 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT
+collective traffic — the collective schedule only exists in the optimized
+HLO after SPMD partitioning, so we regex it out of ``compiled.as_text()``.
+
+For every ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction we take the result
+shape's byte size and weight it by the ring-transfer factor for the
+collective type (bytes that actually cross links per participating chip):
+
+    all-reduce        2 (n-1)/n      (ring reduce-scatter + all-gather)
+    all-gather        (n-1)/n        (per-chip share of gathered bytes)
+    reduce-scatter    (n-1)/n        (input bytes = result * n)
+    all-to-all        (n-1)/n
+    collective-permute 1
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.1 = bf16[8,128,4096]{2,1,0} all-reduce(...)
+#       ROOT %tuple ... (f32[16], u32[]) all-gather(...)
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+RING_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n if n > 1 else 0.0,
+    "all-gather": lambda n: (n - 1) / n if n > 1 else 0.0,
+    "reduce-scatter": lambda n: (n - 1) / n if n > 1 else 0.0,
+    "all-to-all": lambda n: (n - 1) / n if n > 1 else 0.0,
+    "collective-permute": lambda n: 1.0,
+}
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(?P<groups>[^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(?P<dims>[0-9,]+)\]<=\[")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format: replica_groups=[G,S]<=[...] -> group size S
+        dims = [int(x) for x in m.group("dims").split(",")]
+        return dims[-1] if dims else default
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group("groups").split("}")[0].strip("{ ")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # raw result-bytes per op type (per chip, as they appear in the
+    # partitioned module) and link-weighted bytes using ring factors
+    raw_bytes: dict
+    link_bytes: dict
+    counts: dict
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+    @property
+    def total_raw_bytes(self) -> float:
+        return sum(self.raw_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    raw: dict = {}
+    link: dict = {}
+    counts: dict = {}
+    seen_started: set = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # async pairs appear as -start/-done; count the pair once
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        if op == "all-gather" and "-start(" in line:
+            # all-gather-start result tuple holds (operand, result); the
+            # shape regex already summed both — subtract operand share.
+            nbytes = int(nbytes)  # keep: operand+result; adjust below
+        n = _group_size(line, default_group)
+        factor = RING_FACTOR[op](n)
+        raw[op] = raw.get(op, 0.0) + nbytes
+        link[op] = link.get(op, 0.0) + nbytes * factor
+        counts[op] = counts.get(op, 0) + 1
+    return CollectiveStats(raw, link, counts)

@@ -1,0 +1,124 @@
+"""Three-term roofline from dry-run AOT artifacts (no real hardware).
+
+    compute_s    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_chip / HBM_BW
+    collective_s = link_bytes_per_chip / LINK_BW
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+``jax.stages.Compiled.cost_analysis()`` reports the *partitioned* (i.e.
+per-device) module's flops/bytes; verified empirically in
+tests/test_roofline.py with a sharded matmul of known size.  Collective
+bytes come from parsing the post-SPMD HLO (utils/hlo.py) with ring
+factors; we assume each mesh axis maps to its own ICI ring (v5e 2-D torus
+has independent link pairs per dimension), so a chip's collective time is
+total ring-weighted bytes over one link's bandwidth — conservative for
+overlapping axes, exact for single-axis collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.utils import hlo as hlo_utils
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    coll_link_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_chip: float = 0.0       # 6ND/chips (useful compute)
+    useful_ratio: float = 0.0               # model_flops / hlo_flops
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_raw: dict = dataclasses.field(default_factory=dict)
+    memory_per_device_gb: float = 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the binding roofline term: how close
+        the *useful* work runs to the hardware ceiling if perfectly
+        overlapped.  This is the score we hillclimb."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_s = self.model_flops_per_chip / PEAK_FLOPS_BF16
+        return useful_s / self.bound_s if useful_s > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "mem_gb": self.memory_per_device_gb,
+        }
+
+
+def analyze(
+    name: str,
+    cost: dict,
+    hlo_text: str,
+    chips: int,
+    model_flops_global: float = 0.0,
+    default_group: Optional[int] = None,
+    memory_bytes: float = 0.0,
+) -> RooflineReport:
+    """cost = compiled.cost_analysis(); hlo_text = compiled.as_text()."""
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = hlo_utils.parse_collectives(hlo_text, default_group or chips)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = stats.total_link_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_global / max(chips, 1)
+    return RooflineReport(
+        name=name, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=nbytes,
+        coll_link_bytes_per_chip=stats.total_link_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_chip=mf,
+        useful_ratio=(mf / flops) if flops > 0 else 0.0,
+        coll_counts=stats.counts, coll_raw=stats.raw_bytes,
+        memory_per_device_gb=memory_bytes / 1e9,
+    )
+
+
+def lm_model_flops(n_params: int, tokens: int, training: bool = True,
+                   active_params: Optional[int] = None) -> float:
+    """6·N·D for a train step (fwd+bwd); 2·N·D for inference forward.
+    For MoE pass active_params (routed-active parameter count)."""
+    n = active_params if active_params is not None else n_params
+    mult = 6.0 if training else 2.0
+    return mult * n * tokens
+
+
+def fmt_seconds(s: float) -> str:
+    if s <= 0:
+        return "0"
+    exp = int(math.floor(math.log10(s)))
+    if exp < -6:
+        return f"{s*1e9:.2f}ns"
+    if exp < -3:
+        return f"{s*1e6:.2f}us"
+    if exp < 0:
+        return f"{s*1e3:.2f}ms"
+    return f"{s:.3f}s"

@@ -1,0 +1,151 @@
+"""ETL + graph-representation tests, incl. hypothesis property tests on
+the structural invariants (edge conservation, Table I monotonicity).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.data import synthetic as S
+from repro.data.etl import (GraphETL, Snapshot, SnapshotStore, ResultSink,
+                            max_adjacent_nodes_sweep)
+
+
+def test_build_coo_sorted_dedup():
+    src = np.array([3, 1, 1, 2, 3], dtype=np.int64)
+    dst = np.array([0, 2, 2, 1, 0], dtype=np.int64)
+    g = G.build_coo(src, dst, 4)
+    assert g.n_edges == 3                      # dedup'd
+    d = np.asarray(g.dst)[:g.n_edges]
+    assert (np.diff(d) >= 0).all()             # dst-sorted
+
+
+def test_build_ell_cap_and_loss():
+    # vertex 0 has 5 in-edges; cap 3 drops 2
+    src = np.array([1, 2, 3, 4, 5, 1])
+    dst = np.array([0, 0, 0, 0, 0, 2])
+    ell = G.build_ell(src, dst, 6, max_degree=3)
+    assert ell.n_edges == 4
+    assert ell.n_edges_total == 6
+    assert ell.lost_fraction == pytest.approx(2 / 6)
+
+
+def test_csr_neighbors():
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 2, 2, 0])
+    csr = G.build_csr(src, dst, 3)
+    ip = np.asarray(csr.indptr)
+    idx = np.asarray(csr.indices)
+    assert set(idx[ip[0]:ip[1]].tolist()) == {1, 2}
+    assert set(idx[ip[1]:ip[2]].tolist()) == {2}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_edges=st.integers(1, 300),
+    n_vertices=st.integers(2, 50),
+    cap=st.integers(1, 20),
+    seed=st.integers(0, 10**6),
+)
+def test_ell_invariants(n_edges, n_vertices, cap, seed):
+    """(1) retained <= total; (2) per-row degree <= cap; (3) retained =
+    sum of min(indeg, cap); (4) lost_fraction in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    ell = G.build_ell(src, dst, n_vertices, cap)
+    assert ell.n_edges <= ell.n_edges_total == n_edges
+    per_row = np.asarray(ell.mask).sum(axis=1)
+    assert (per_row <= cap).all()
+    indeg = np.bincount(dst, minlength=n_vertices)
+    assert ell.n_edges == int(np.minimum(indeg, cap).sum())
+    assert 0.0 <= ell.lost_fraction <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 60))
+def test_coo_symmetrize_property(seed, n):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(1, 100)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    g = G.build_coo(src, dst, n, symmetrize=True)
+    s = np.asarray(g.src)[:g.n_edges]
+    d = np.asarray(g.dst)[:g.n_edges]
+    fwd = set(zip(s.tolist(), d.tolist()))
+    assert all((b, a) in fwd for a, b in fwd)   # symmetric closure
+
+
+def test_table1_sweep_monotonic():
+    """Table I reproduction: loss % decreases as the cap rises, reaching
+    exactly 0 at cap >= max degree (paper: 0% at cap 10M)."""
+    u, i = S.safety_bipartite_graph(2000, 500, seed=4)
+    caps = [1, 4, 16, 64, 256, 100000]
+    rows = max_adjacent_nodes_sweep(u, i, 500, caps)
+    losses = [r["lost_percentage"] for r in rows]
+    assert all(a >= b for a, b in zip(losses, losses[1:]))
+    assert losses[-1] == 0.0
+    assert losses[0] > 10.0                    # tight cap loses real data
+
+
+def test_snapshot_store_and_etl(tmp_path):
+    store = SnapshotStore(str(tmp_path / "snaps"))
+    rng = np.random.default_rng(0)
+    for day in ["d0", "d1"]:
+        store.write(Snapshot(day, rng.integers(0, 100, 500),
+                             rng.integers(0, 100, 500)))
+    assert store.list() == ["d0", "d1"]
+    etl = GraphETL(max_adjacent_nodes=16)
+    snaps = [store.read(n) for n in store.list()]
+    coo, ell, report = etl.build(snaps, n_vertices=100)
+    assert report.n_edges_in == 1000
+    assert report.n_edges_deduped <= 1000
+    assert coo.n_vertices == 100
+    assert ell is not None and ell.max_degree == 16
+    assert 0.0 <= report.lost_fraction < 1.0
+    assert len(report.content_hash) == 16
+
+
+def test_result_sink_roundtrip(tmp_path):
+    sink = ResultSink(str(tmp_path / "out"))
+    sink.write("cc_labels", {"labels": np.arange(10)}, {"algo": "cc"})
+    arrays, manifest = sink.read("cc_labels")
+    np.testing.assert_array_equal(arrays["labels"], np.arange(10))
+    assert manifest["meta"]["algo"] == "cc"
+
+
+def test_degree_stats():
+    from repro.core.algorithms.degrees import degree_stats
+    src, dst = S.user_follow_graph(500, 4.0, seed=1)
+    g = G.build_coo(src, dst, 500)
+    stats = degree_stats(g)
+    assert stats["n_vertices"] == 500
+    assert stats["max_in_degree"] >= stats["mean_degree"]
+
+
+def test_similarity():
+    from repro.core.algorithms.similarity import (jaccard_similarity,
+                                                  common_neighbors)
+    import jax.numpy as jnp
+    # triangle 0-1-2 plus pendant 3: N(0)={1,2}, N(1)={0,2}, N(2)={0,1,3}
+    src = np.array([0, 0, 1, 1, 2, 2, 2, 3])
+    dst = np.array([1, 2, 0, 2, 0, 1, 3, 2])
+    ell = G.build_ell(src, dst, 4, max_degree=4, direction="out")
+    u = jnp.array([0]); v = jnp.array([1])
+    assert int(common_neighbors(ell, u, v)[0]) == 1     # {2}
+    jac = float(jaccard_similarity(ell, u, v)[0])
+    assert jac == pytest.approx(1 / 3)                   # |{2}| / |{0,1,2}|
+
+
+def test_local_engine_pallas_path():
+    """LocalEngine with use_pallas=True routes SpMV through the Pallas
+    kernel (interpret on CPU) and matches the default path."""
+    from repro.core.engines import LocalEngine
+    from repro.core import graph as G
+    from repro.data import synthetic as S
+    import numpy as np
+    src, dst = S.user_follow_graph(300, 4.0, seed=8)
+    g = G.build_coo(src, dst, 300, symmetrize=True)
+    a = LocalEngine(g, use_pallas=False).connected_components()
+    b = LocalEngine(g, use_pallas=True).connected_components()
+    np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))

@@ -1,0 +1,186 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ell_combine.ops import ell_spmv, ell_spmv_ref
+from repro.kernels.ell_combine.ref import ell_combine_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+# ---------------------------------------------------------------- ell_combine
+
+@pytest.mark.parametrize("v,k,vx", [(64, 16, 80), (300, 37, 400),
+                                    (1024, 128, 1024), (17, 200, 33)])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_ell_combine_shapes(v, k, vx, op):
+    rng = np.random.default_rng(v + k)
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < 0.7)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(vx), jnp.float32)
+    got = ell_spmv(nbr, mask, w, x, op=op)
+    want = ell_spmv_ref(nbr, mask, w, x, op=op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ell_combine_empty_rows():
+    """Vertices without neighbors get the monoid identity."""
+    nbr = jnp.zeros((8, 4), jnp.int32)
+    mask = jnp.zeros((8, 4), bool)
+    w = jnp.ones((8, 4), jnp.float32)
+    x = jnp.ones((16,), jnp.float32)
+    assert (np.asarray(ell_spmv(nbr, mask, w, x, op="sum")) == 0).all()
+    assert np.isinf(np.asarray(ell_spmv(nbr, mask, w, x, op="min"))).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(1, 80),
+    k=st.integers(1, 40),
+    density=st.floats(0.0, 1.0),
+    op=st.sampled_from(["sum", "min", "max"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_combine_property(v, k, density, op, seed):
+    """Kernel == oracle for arbitrary shapes/masks (hypothesis)."""
+    rng = np.random.default_rng(seed)
+    vx = v + rng.integers(1, 50)
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < density)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(vx), jnp.float32)
+    got = np.asarray(ell_spmv(nbr, mask, w, x, op=op))
+    want = np.asarray(ell_combine_ref(nbr, mask, w, x, op=op))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ell_spmv_matches_dense_matmul():
+    """ELL SpMV == dense A @ x for a random sparse matrix."""
+    rng = np.random.default_rng(3)
+    v, k, vx = 50, 12, 50
+    nbr = rng.integers(0, vx, (v, k)).astype(np.int32)
+    mask = rng.random((v, k)) < 0.5
+    w = rng.standard_normal((v, k)).astype(np.float32)
+    dense = np.zeros((v, vx), np.float32)
+    for i in range(v):
+        for j in range(k):
+            if mask[i, j]:
+                dense[i, nbr[i, j]] += w[i, j]
+    x = rng.standard_normal(vx).astype(np.float32)
+    got = np.asarray(ell_spmv(jnp.asarray(nbr), jnp.asarray(mask),
+                              jnp.asarray(w), jnp.asarray(x), op="sum"))
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ flash attention
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 2, 2, 128, 32),     # MHA
+    (2, 4, 2, 256, 64),     # GQA
+    (1, 8, 1, 128, 64),     # MQA
+])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=30.0),
+])
+def test_flash_attention_variants(b, hq, hkv, s, d, kwargs):
+    rng = np.random.default_rng(s + hq)
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, **kwargs)
+    want = mha_reference(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64)
+    want = mha_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_blocks_divide_requirement():
+    """Non-dividing blocks shrink to fit via the wrapper."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 96, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 96, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 96, 32)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=96, block_k=96)
+    want = mha_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------- chunked attention (pure-JAX flash)
+
+def test_chunked_attention_vs_ref():
+    from repro.models.layers import attn_chunked, attn_ref
+    rng = np.random.default_rng(5)
+    b, s, hq, hkv, dh = 2, 96, 6, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    pos = jnp.arange(s)
+    for kwargs in [dict(causal=True), dict(causal=True, window=17),
+                   dict(causal=True, softcap=20.0),
+                   dict(causal=True, prefix=8)]:
+        got = attn_chunked(q, k, v, pos, pos, chunk_q=32, chunk_k=16,
+                           **kwargs)
+        want = attn_ref(q, k, v, pos, pos, **kwargs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=str(kwargs))
+
+
+# ------------------------------------------------------- ring attention
+
+def test_ring_attention_vs_ref():
+    """Context-parallel ring attention == reference, on 8 virtual devices
+    (subprocess: device count must be set before jax init)."""
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.models.layers import attn_ring, attn_ref
+        mesh = make_mesh((4, 2), ('data', 'model'))
+        rng = np.random.default_rng(0)
+        B, S, Hq, Hkv, Dh = 4, 64, 6, 2, 32
+        q = jnp.asarray(rng.standard_normal((B, S, Hq, Dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+        pos = jnp.arange(S)
+        with mesh:
+            for kwargs in [dict(causal=True), dict(causal=True, window=17),
+                           dict(causal=True, softcap=20.0),
+                           dict(causal=False)]:
+                got = jax.jit(lambda q, k, v: attn_ring(
+                    q, k, v, mesh=mesh, chunk_k=16, **kwargs))(q, k, v)
+                want = attn_ref(q, k, v, pos, pos, **kwargs)
+                assert float(jnp.max(jnp.abs(got - want))) < 2e-5, kwargs
+        print('RING_OK')
+    """)
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=600,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"})
+    assert "RING_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (reduced configs of the same family):
+one forward + loss + one optimizer step on CPU, asserting output shapes
+and finiteness; decode/prefill consistency for every family.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs, reduced_config
+from repro.models.registry import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_train_step, init_train_state
+
+ARCHS = list_archs()
+S = 16
+
+
+def make_batch(cfg, rng, b=2, s=S):
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.prefix_len, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, rng)
+
+    logits = model.forward(model.init(jax.random.PRNGKey(0)), batch)
+    expect_s = S if cfg.family != "vlm" else S
+    assert logits.shape[0] == 2 and logits.shape[1] == expect_s
+    assert logits.shape[2] == cfg.padded_vocab
+    assert bool(jnp.isfinite(
+        jnp.where(jnp.isneginf(logits), 0.0, logits)).all())
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(peak_lr=1e-3)))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree_util.tree_reduce(
+        lambda acc, x: acc + float(jnp.sum(jnp.abs(x))), state.params, 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = dataclasses.replace(reduced_config(get_config(arch)),
+                              attn_impl="ref",
+                              capacity_factor=100.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    batch = make_batch(cfg, rng)
+    tok = batch["tokens"]
+    full = model.forward(params, batch)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tok[:, :S - 1]
+    cache_len = S + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    last, cache = model.prefill(params, pre_batch, cache_len=cache_len)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, S - 2]),
+                               rtol=2e-4, atol=2e-4)
+    idx = S - 1 + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    lg, _ = model.decode_step(params, tok[:, S - 1:S], cache, jnp.int32(idx))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_spec_matches_param_tree(arch):
+    """Every param leaf must have a PartitionSpec of matching rank."""
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    spec = model.param_spec()
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = {jax.tree_util.keystr(k): v for k, v in
+              jax.tree_util.tree_flatten_with_path(
+                  spec, is_leaf=lambda x: isinstance(
+                      x, jax.sharding.PartitionSpec))[0]}
+    for key, leaf in flat_p:
+        ks = jax.tree_util.keystr(key)
+        assert ks in flat_s, f"missing spec for {ks}"
+        sp = flat_s[ks]
+        assert len(sp) <= len(leaf.shape), f"spec rank mismatch at {ks}"
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs hit their nameplate parameter counts."""
+    expected = {
+        "mistral_large_123b": (110e9, 135e9),
+        "gemma2_2b": (2.0e9, 3.3e9),
+        "smollm_360m": (0.30e9, 0.45e9),
+        "granite_8b": (7e9, 9e9),
+        "olmoe_1b_7b": (6e9, 8e9),
+        "dbrx_132b": (120e9, 140e9),
+        "xlstm_125m": (0.1e9, 0.2e9),
+        "hymba_1p5b": (1.2e9, 2.2e9),
+        "whisper_large_v3": (1.2e9, 2.0e9),
+        "paligemma_3b": (2.2e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}-{hi/1e9}]"
+
+
+def test_gemma2_local_global_alternation():
+    from repro.models.layers import layer_windows
+    cfg = get_config("gemma2_2b")
+    w = np.asarray(layer_windows(cfg))
+    assert w[0] == 4096 and w[1] == 0 and w[2] == 4096  # local/global
+
+
+def test_hymba_three_global_layers():
+    from repro.models.layers import layer_windows
+    cfg = get_config("hymba_1p5b")
+    w = np.asarray(layer_windows(cfg))
+    assert (w == 0).sum() == 3
+    assert w[0] == 0 and w[15] == 0 and w[31] == 0

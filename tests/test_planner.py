@@ -1,0 +1,67 @@
+"""Cost-based router tests: the Fig. 5 crossover must emerge from the
+model, and the paper-scale workloads must route to the right engine.
+"""
+import pytest
+
+from repro.core import planner as P
+
+
+def _stats(v, e):
+    return P.GraphStats(n_vertices=v, n_edges=e, bytes_coo=e * 12)
+
+
+def test_small_graph_small_output_routes_local():
+    g = _stats(400_000, 2_000_000)
+    q = P.spec_for("connected_components", g, count_only=True)
+    assert P.choose_engine(g, q, 256).engine == "local"
+
+
+def test_huge_graph_routes_distributed():
+    # paper scale: combined connected users, 2.41B vertices 1.5B edges
+    g = _stats(2_410_000_000, 1_500_000_000)
+    q = P.spec_for("connected_components", g)
+    plan = P.choose_engine(g, q, 256)
+    assert plan.engine == "distributed"
+    assert plan.est_local_s == float("inf")     # exceeds local memory
+
+
+def test_multi_account_scale_routes_distributed():
+    # paper scale: 14.89B vertices, 30.86B edges heterogeneous graph
+    g = _stats(14_890_000_000, 30_860_000_000)
+    q = P.spec_for("two_hop", g)
+    assert P.choose_engine(g, q, 256).engine == "distributed"
+
+
+def test_output_cardinality_flips_engine():
+    """Fig. 5's second finding: same graph, count vs table changes the
+    winner (Neo4j count in 2s vs Spark 10min)."""
+    g = _stats(10_000_000, 50_000_000)
+    q_count = P.spec_for("connected_components", g, count_only=True)
+    q_pairs = P.spec_for("two_hop", g,
+                         expected_pairs=2_000_000_000)
+    plan_count = P.choose_engine(g, q_count, 256)
+    plan_pairs = P.choose_engine(g, q_pairs, 256)
+    assert plan_count.engine == "local"
+    assert plan_pairs.engine == "distributed"
+
+
+def test_crossover_exists():
+    """Sweeping graph size, the winner must flip exactly once from local
+    to distributed (the Fig. 5 shape)."""
+    q_engine = []
+    for v in [10**4, 10**5, 10**6, 10**7, 10**8, 10**9, 10**10]:
+        g = _stats(v, v * 5)
+        q = P.spec_for("pagerank", g)
+        q_engine.append(P.choose_engine(g, q, 256).engine)
+    assert q_engine[0] == "local"
+    assert q_engine[-1] == "distributed"
+    flips = sum(a != b for a, b in zip(q_engine, q_engine[1:]))
+    assert flips == 1
+
+
+def test_cost_estimates_positive_and_ordered():
+    g = _stats(1_000_000, 8_000_000)
+    q = P.spec_for("pagerank", g)
+    tl = P.estimate_local_cost(g, q)
+    td = P.estimate_dist_cost(g, q, 256)
+    assert tl > 0 and td > 0
