@@ -1,0 +1,102 @@
+"""Algorithm-suite sweep: per-workload local-vs-distributed crossover in
+the Fig. 5 style, across the full vertex-program library.
+
+For every algorithm behind the unified query layer this measures, at
+each graph scale:
+
+  * LocalEngine wall time (the Neo4j-analogue interactive path);
+  * DistributedEngine wall time (edge-partitioned BSP, n_data=4 — on a
+    one-device box this exposes the partitioning/launch overhead whose
+    amortization is exactly the Fig. 5 story);
+  * the count-only fast-path time where the algorithm has one (the
+    paper's '<2 s count vs ~10 min table' pattern);
+  * the planner's projected crossover scale for a 256-chip mesh — each
+    algorithm crosses at a different V because its iteration count,
+    state bytes and message volume differ (triangle counting's bitset
+    state crosses earliest, degree-like scans latest).
+
+Results double as calibration input for the planner constants.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_fn, csv_row
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core.engines import LocalEngine, DistributedEngine
+from repro.core.query import GraphQuery
+from repro.data import synthetic as S
+
+
+# (name, engine-method runner, count-only runner or None, needs symmetric)
+_SUITE = [
+    ("bfs", lambda e: e.bfs([0]).value,
+     lambda e: e.reachable_count([0]).value, False),
+    ("sssp", lambda e: e.sssp(0).value, None, False),
+    ("pagerank", lambda e: e.pagerank(max_iters=20).value, None, False),
+    ("connected_components", lambda e: e.connected_components().value,
+     lambda e: e.num_components().value, True),
+    ("label_propagation", lambda e: e.label_propagation(max_iters=15).value,
+     lambda e: e.num_communities(max_iters=15).value, True),
+    ("triangle_count", lambda e: e.triangle_count().value, None, True),
+    ("k_core", lambda e: e.k_core(3).value,
+     lambda e: e.k_core_size(3).value, True),
+]
+
+
+def _build(n_vertices: int, symmetric: bool) -> G.GraphCOO:
+    src, dst = S.user_follow_graph(n_vertices, 4.0, seed=1)
+    keep = src != dst
+    return G.build_coo(src[keep], dst[keep], n_vertices,
+                       symmetrize=symmetric)
+
+
+def run(out=print):
+    rows = []
+    for n_vertices in [2_000, 20_000]:
+        graphs = {sym: _build(n_vertices, sym) for sym in (False, True)}
+        locals_ = {sym: LocalEngine(g) for sym, g in graphs.items()}
+        dists = {sym: DistributedEngine(g, n_data=4)
+                 for sym, g in graphs.items()}
+        for name, table_fn, count_fn, sym in _SUITE:
+            if name == "triangle_count" and n_vertices > 5_000:
+                # O(V^2/32) bitset state: interactive-scale only on one
+                # device; the planner routes larger V distributed.
+                continue
+            t_local, r_local = time_fn(lambda: table_fn(locals_[sym]))
+            t_dist, r_dist = time_fn(lambda: table_fn(dists[sym]))
+            a, b = np.asarray(r_local), np.asarray(r_dist)
+            assert a.shape == b.shape, name
+            if np.issubdtype(a.dtype, np.floating):
+                # summation order differs across edge shards
+                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7,
+                                           err_msg=name)
+            else:
+                assert (a == b).all(), name
+            out(csv_row(f"algo_suite/{name}_local_v{n_vertices}", t_local,
+                        f"bsp_ratio={t_dist / t_local:.2f}x"))
+            if count_fn is not None:
+                t_count, _ = time_fn(lambda: count_fn(locals_[sym]))
+                out(csv_row(f"algo_suite/{name}_count_v{n_vertices}",
+                            t_count,
+                            f"count_vs_table={t_local / max(t_count, 1e-9):.2f}x"))
+            rows.append((name, n_vertices, t_local, t_dist))
+
+    # planner-projected crossover per algorithm on the production mesh —
+    # the per-workload Fig. 5 family
+    for name, _, _, _ in _SUITE:
+        cross = None
+        for v in [10**4, 10**5, 10**6, 10**7, 10**8, 10**9, 10**10]:
+            stats = P.GraphStats(v, v * 5, v * 5 * 12)
+            plan = P.choose_engine(stats, P.spec_for(name, stats), 256)
+            if plan.engine == "distributed":
+                cross = v
+                break
+        out(csv_row(f"algo_suite/crossover_{name}", 0.0,
+                    f"crossover_at_V={cross}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,12 +9,12 @@ import traceback
 def main() -> None:
     from benchmarks import (fig5_engine_crossover, fig6_multi_account,
                             fig7_connected_users, table1_maxadjacentnodes,
-                            kernels_bench, roofline_report)
+                            algo_suite, kernels_bench, roofline_report)
     print("name,us_per_call,derived")
     ok = True
     for mod in (fig5_engine_crossover, fig6_multi_account,
                 fig7_connected_users, table1_maxadjacentnodes,
-                kernels_bench, roofline_report):
+                algo_suite, kernels_bench, roofline_report):
         try:
             mod.run(out=print)
         except Exception:   # noqa: BLE001 — keep the harness going

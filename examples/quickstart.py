@@ -34,3 +34,14 @@ bip = G.build_coo(users, ids, int(max(users.max(), ids.max())) + 1)
 plat3 = GraphPlatform(bip)
 r = plat3.query(GraphQuery.two_hop(n_users=2_000, count_only=True))
 print(f"candidate same-user pairs (upper bound): {r.value} via {r.engine}")
+
+# 6. The broader suite, all through the same platform: traversal,
+#    communities, cohesion — each with its count-only fast path.
+r = platform2.query(GraphQuery.bfs([0], count_only=True))
+print(f"reachable from user 0: {r.value} via {r.engine}")
+r = platform2.query(GraphQuery.label_propagation(count_only=True))
+print(f"communities (label propagation): {r.value} via {r.engine}")
+r = platform2.query(GraphQuery.k_core(5, count_only=True))
+print(f"5-core size: {r.value} via {r.engine}")
+dist = platform.query(GraphQuery.sssp(0)).value
+print(f"sssp from user 0: {np.isfinite(np.asarray(dist)).sum()} reachable")

@@ -7,3 +7,6 @@ from repro.core.algorithms.two_hop import (
 )
 from repro.core.algorithms.degrees import degree_stats
 from repro.core.algorithms.similarity import jaccard_similarity, common_neighbors
+from repro.core.algorithms.traversal import bfs_distances, sssp, reachable_count
+from repro.core.algorithms.community import label_propagation, num_communities
+from repro.core.algorithms.triangles import triangle_count, k_core, core_size

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import graph as G
 from repro.core.partition import ShardedCOO, partition
-from repro.core.pregel import PregelSpec, run_pregel
+from repro.core.pregel import PregelSpec, converged_halt, run_pregel
 
 
 def _cc_message(lbl_src, w):
@@ -40,15 +40,12 @@ def _cc_apply_jump(lbl, agg, ids, gval):
     return jnp.minimum(new, new[jnp.clip(new, 0, new.shape[0] - 1)])
 
 
-def _cc_halt(old, new, valid):
-    return jnp.logical_not(jnp.any(jnp.logical_and(valid, new != old)))
-
-
 _CC_SPEC = PregelSpec(message=_cc_message, combine="min", apply=_cc_apply,
-                      identity=np.iinfo(np.int32).max, halt=_cc_halt)
+                      identity=np.iinfo(np.int32).max, halt=converged_halt)
 _CC_SPEC_JUMP = PregelSpec(message=_cc_message, combine="min",
                            apply=_cc_apply_jump,
-                           identity=np.iinfo(np.int32).max, halt=_cc_halt)
+                           identity=np.iinfo(np.int32).max,
+                           halt=converged_halt)
 
 
 def connected_components(

@@ -1,0 +1,184 @@
+"""Cohesion workloads: triangle counting and k-core degree-peeling.
+
+**Triangle counting** needs neighborhood *intersection*, which a scalar
+message cannot carry.  We use the pregel engine's N-D vertex state and
+edge-program messages: vertex state is a packed neighborhood bitset
+(``ceil(V/32)`` uint32 words, plus one count word), built in one
+superstep (sum of deduped one-hot rows == bitwise OR) and intersected in
+a second superstep where each edge reads *both* endpoint states:
+
+    superstep 1:  state[v] <- OR_{(u,v) in E} onehot(u)       (adjacency)
+    superstep 2:  count[v] <- sum_{(u,v) in E} popcount(N(u) & N(v))
+
+On the symmetrized graph every triangle is counted six times (three
+undirected edges, two directions each), so ``total // 6`` is exact.
+Memory is O(V^2/32) bits of state and O(E * V/32) gather traffic — the
+quadratic term the planner charges via ``state_bytes_per_vertex``, which
+pushes large-V triangle queries onto the distributed engine (and keeps
+the local engine for the small-graph interactive regime, Fig. 5 style).
+
+**k-core** is the classic peeling fixpoint as a scalar vertex program:
+vertices stay alive while their alive-degree is >= k; one XLA while-loop
+runs peeling to convergence on either engine.
+
+Both require a symmetrized graph (``build_coo(..., symmetrize=True)``,
+enforced via the ``GraphCOO.symmetric`` flag) — on a directed edge list
+they would run fine but return silently wrong answers.  Self-loops are
+tolerated: triangle counting clears each vertex's own bit from its
+neighborhood bitset, and k-core counts a self-loop once toward degree.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.partition import ShardedCOO, partition
+from repro.core.pregel import PregelSpec, converged_halt, run_pregel
+
+
+def _n_words(n_vertices: int) -> int:
+    return -(-n_vertices // 32)
+
+
+# agg = summed one-hot rows of in-neighbors == their OR (edges are
+# deduped so no bit is added twice); count word arrives as 0.
+_ADJACENCY_SPEC = PregelSpec(
+    message=lambda s, w: s,
+    combine="sum",
+    apply=lambda old, agg, ids, gval: agg.astype(jnp.uint32),
+    identity=0)
+
+
+@lru_cache(maxsize=None)
+def _intersect_spec(n_words: int) -> PregelSpec:
+    W = n_words
+
+    def message(src_state, w, dst_state):
+        sb, db = src_state[:, :W], dst_state[:, :W]
+        common = jnp.sum(jnp.bitwise_count(sb & db).astype(jnp.uint32),
+                         axis=-1)
+        # a self-loop edge intersects N(v) with itself (|N(v)|, not a
+        # triangle count).  With own bits cleared, adjacent *distinct*
+        # vertices always differ in their bitsets (v is in N(u) but not
+        # in N(v)), so bitset equality identifies exactly the loops.
+        is_loop = jnp.all(sb == db, axis=-1)
+        return jnp.where(is_loop, jnp.uint32(0), common)
+
+    def apply(old, agg, ids, gval):
+        return jnp.concatenate(
+            [old[:, :W], agg[:, None].astype(jnp.uint32)], axis=-1)
+
+    return PregelSpec(
+        message=message, combine="sum", apply=apply, identity=0,
+        needs_dst_state=True)
+
+
+def triangle_count(
+    g: G.GraphCOO,
+    mesh=None,
+    n_data: int = 1,
+    n_model: int = 1,
+    sharded: Optional[ShardedCOO] = None,
+):
+    """Returns ``(n_triangles, per_vertex_pair_counts [V] — popcount sums
+    per destination, each triangle contributing 6 across the graph)``.
+    """
+    G.require_symmetric(g, "triangle_count")
+    V = g.n_vertices
+    W = _n_words(V)
+    if sharded is None:
+        sharded = partition(g, n_data, n_model)
+    # own-bit bitset rows; the trailing word accumulates the pair counts
+    init = np.zeros((sharded.n_pad, W + 1), dtype=np.uint32)
+    ids = np.arange(V, dtype=np.int64)
+    own_bits = np.uint32(1) << (ids % 32).astype(np.uint32)
+    init[ids, ids // 32] = own_bits
+
+    bitsets, _ = run_pregel(_ADJACENCY_SPEC, sharded, jnp.asarray(init),
+                            max_iters=1, mesh=mesh)
+    # self-loops would put v's own bit in N(v) and inflate every
+    # intersection along v's edges — clear it unconditionally
+    bitsets = bitsets.at[jnp.asarray(ids), jnp.asarray(ids // 32)].set(
+        bitsets[jnp.asarray(ids), jnp.asarray(ids // 32)]
+        & ~jnp.asarray(own_bits))
+    counted, _ = run_pregel(_intersect_spec(W), sharded, bitsets,
+                            max_iters=1, mesh=mesh)
+    per_vertex = np.asarray(counted[:V, W]).astype(np.int64)
+    return int(per_vertex.sum()) // 6, per_vertex
+
+
+# ------------------------------------------------------------------- k-core
+
+@lru_cache(maxsize=None)
+def _kcore_spec(k: int) -> PregelSpec:
+    def apply(alive, deg, ids, gval):
+        # peeling is monotone: once dropped, never resurrected
+        return jnp.where(alive > 0.5, (deg >= k).astype(jnp.float32), 0.0)
+
+    return PregelSpec(
+        message=lambda alive, w: alive,
+        combine="sum", apply=apply, identity=0.0,
+        halt=converged_halt)
+
+
+def k_core(
+    g: G.GraphCOO,
+    k: int,
+    max_iters: Optional[int] = None,
+    mesh=None,
+    n_data: int = 1,
+    n_model: int = 1,
+    sharded: Optional[ShardedCOO] = None,
+):
+    """Returns ``(in_core [V] bool, iters)`` — membership in the maximal
+    subgraph where every vertex has degree >= k (a self-loop counts once
+    toward its vertex's degree).  ``max_iters=None`` (default) guarantees
+    the peeling reaches its fixpoint (at most V rounds; the halt check
+    exits far earlier in practice)."""
+    G.require_symmetric(g, "k_core")
+    V = g.n_vertices
+    if max_iters is None:
+        max_iters = V
+    if sharded is None:
+        sharded = partition(g, n_data, n_model)
+    init = jnp.ones(sharded.n_pad, jnp.float32)
+    alive, iters = run_pregel(_kcore_spec(int(k)), sharded, init,
+                              max_iters, mesh=mesh)
+    return alive[:V] > 0.5, iters
+
+
+def core_size(in_core) -> int:
+    """Count-only fast path: |k-core| without materializing membership."""
+    return int(jnp.sum(in_core))
+
+
+# ---------------------------------------------------------------- oracles
+
+def triangle_count_reference(src, dst, n_vertices: int) -> int:
+    """Dense-matmul oracle: trace(A^3) / 6 on the symmetrized 0/1
+    adjacency (small graphs only)."""
+    a = np.zeros((n_vertices, n_vertices), dtype=np.int64)
+    s = np.asarray(src)
+    d = np.asarray(dst)
+    a[s, d] = 1
+    a[d, s] = 1
+    np.fill_diagonal(a, 0)
+    return int(np.trace(a @ a @ a)) // 6
+
+
+def k_core_reference(src, dst, n_vertices: int, k: int) -> np.ndarray:
+    """Iterative peeling oracle on the symmetrized edge list."""
+    s = np.asarray(src, dtype=np.int64)
+    d = np.asarray(dst, dtype=np.int64)
+    alive = np.ones(n_vertices, dtype=bool)
+    while True:
+        keep = alive[s] & alive[d]
+        deg = np.bincount(d[keep], minlength=n_vertices)
+        drop = alive & (deg < k)
+        if not drop.any():
+            return alive
+        alive[drop] = False

@@ -46,15 +46,19 @@ class GraphCOO:
     w: Array            # [E_pad] float32 (1.0 for unweighted)
     n_vertices: int     # static
     n_edges: int        # true edge count (static)
+    symmetric: bool = False   # built via symmetrize=True (static metadata;
+                              # set it manually if the edge list is already
+                              # symmetric by construction)
 
-    # -- pytree protocol (n_vertices / n_edges are static aux data) --------
+    # -- pytree protocol (scalars are static aux data) ---------------------
     def tree_flatten(self):
-        return (self.src, self.dst, self.w), (self.n_vertices, self.n_edges)
+        return (self.src, self.dst, self.w), (
+            self.n_vertices, self.n_edges, self.symmetric)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         src, dst, w = children
-        return cls(src, dst, w, aux[0], aux[1])
+        return cls(src, dst, w, *aux)
 
     @property
     def e_pad(self) -> int:
@@ -177,6 +181,7 @@ def build_coo(
         w=jnp.asarray(_pad_to(w, e_pad, 0.0)),
         n_vertices=int(n_vertices),
         n_edges=n_edges,
+        symmetric=bool(symmetrize),
     )
 
 
@@ -294,6 +299,17 @@ def pad_vertex_state(x: Array, identity) -> Array:
     """Append the sentinel row so gathers through padded ids read identity."""
     pad = jnp.full((1,) + x.shape[1:], identity, dtype=x.dtype)
     return jnp.concatenate([x, pad], axis=0)
+
+
+def require_symmetric(g: GraphCOO, algorithm: str) -> None:
+    """Guard for algorithms with undirected semantics — on a directed
+    edge list they run fine but return silently wrong answers."""
+    if not getattr(g, "symmetric", False):
+        raise ValueError(
+            f"{algorithm} has undirected semantics and needs a symmetrized "
+            f"edge list: build with build_coo(..., symmetrize=True), or set "
+            f"coo.symmetric = True if the edges are already symmetric by "
+            f"construction")
 
 
 def out_degrees(g: GraphCOO) -> Array:

@@ -52,6 +52,12 @@ class ShardedCOO:
     def vertex_layout(self) -> str:
         return "replicated" if self.n_model == 1 else "sharded"
 
+    @property
+    def n_pad(self) -> int:
+        """Length of a full vertex-state array (``n_model * v_local``;
+        1-D layouts set ``v_local = n_vertices``, so this is V there)."""
+        return self.n_model * self.v_local
+
 
 def _pack_shards(groups, e_shard, sentinel):
     """Stack variable-size edge groups into a padded shard-major array."""

@@ -50,11 +50,19 @@ class QuerySpec:
     per-vertex tables; pair-count estimates for motifs).
     iterations: expected supersteps (1 for motifs/degrees).
     row_bytes: bytes per output row.
+    state_bytes_per_vertex: per-superstep vertex-state traffic (8 for
+    scalar programs; triangle counting's neighborhood bitsets are
+    ~V/8 bytes per vertex — the term that pushes it distributed early).
+    edge_bytes_factor: message-volume multiplier over the raw edge bytes
+    (1 for scalar messages; label propagation's 2C-channel structured
+    messages move ~2C*4/12 times the edge list per superstep).
     """
     algorithm: str
     output_rows: int
     iterations: int = 1
     row_bytes: int = 8
+    state_bytes_per_vertex: float = 8.0
+    edge_bytes_factor: float = 1.0
 
 
 @dataclasses.dataclass
@@ -68,9 +76,10 @@ class Plan:
 def estimate_local_cost(g: GraphStats, q: QuerySpec) -> float:
     """One device streams the edge set from HBM each superstep, then
     egresses the output to the host once."""
-    if g.bytes_coo > LOCAL_MEM_BUDGET:
+    if g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices > LOCAL_MEM_BUDGET:
         return float("inf")
-    touched = (g.bytes_coo + 8 * g.n_vertices) * q.iterations
+    touched = (g.bytes_coo * q.edge_bytes_factor
+               + q.state_bytes_per_vertex * g.n_vertices) * q.iterations
     return (LOCAL_DISPATCH_S
             + touched / HBM_BW
             + q.output_rows * q.row_bytes / HOST_EGRESS_BW)
@@ -82,11 +91,13 @@ def estimate_dist_cost(g: GraphStats, q: QuerySpec, n_chips: int,
     a ring all-reduce of the vertex aggregate; output egress parallelizes
     over hosts."""
     n_chips = max(n_chips, 1)
-    touched = (g.bytes_coo / n_chips + 8 * g.n_vertices) * q.iterations
+    touched = (g.bytes_coo * q.edge_bytes_factor / n_chips
+               + q.state_bytes_per_vertex * g.n_vertices) * q.iterations
     coll = 0.0
     if vertex_replicated and n_chips > 1:
         ring = 2.0 * (n_chips - 1) / n_chips
-        coll = (8 * g.n_vertices * ring / LINK_BW) * q.iterations
+        coll = (q.state_bytes_per_vertex * g.n_vertices * ring / LINK_BW) \
+            * q.iterations
     egress = q.output_rows * q.row_bytes / (HOST_EGRESS_BW * max(n_chips // 4, 1))
     return DIST_STEP_S * q.iterations + touched / HBM_BW + coll + egress
 
@@ -95,8 +106,10 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
     tl = estimate_local_cost(g, q)
     td = estimate_dist_cost(g, q, n_chips)
     if tl == float("inf"):
+        need = g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices
         return Plan("distributed", tl, td,
-                    f"graph ({g.bytes_coo/1e9:.1f} GB) exceeds local budget")
+                    f"graph + vertex state ({need/1e9:.1f} GB) exceeds "
+                    f"local budget")
     if tl <= td:
         why = ("small output" if q.output_rows <= 1024 else "medium graph")
         return Plan("local", tl, td, f"local wins ({why}): "
@@ -108,7 +121,8 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
 # Canonical query specs for the library algorithms -------------------------
 
 def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
-             expected_pairs: Optional[int] = None) -> QuerySpec:
+             expected_pairs: Optional[int] = None,
+             n_channels: int = 64) -> QuerySpec:
     if algorithm == "pagerank":
         return QuerySpec("pagerank", 1 if count_only else g.n_vertices,
                          iterations=40)
@@ -121,4 +135,27 @@ def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
         return QuerySpec("two_hop", rows, iterations=1)
     if algorithm == "degree_stats":
         return QuerySpec("degree_stats", 1, iterations=1)
+    if algorithm == "bfs":
+        # small-world graphs: effective diameter ~ a dozen supersteps
+        return QuerySpec("bfs", 1 if count_only else g.n_vertices,
+                         iterations=12, state_bytes_per_vertex=4.0)
+    if algorithm == "sssp":
+        # weighted relaxation settles slower than hop distance
+        return QuerySpec("sssp", 1 if count_only else g.n_vertices,
+                         iterations=24, state_bytes_per_vertex=4.0)
+    if algorithm == "label_propagation":
+        # structured messages: 2C channels of 4 bytes vs 12-byte edges
+        return QuerySpec("label_propagation",
+                         1 if count_only else g.n_vertices,
+                         iterations=15, state_bytes_per_vertex=4.0,
+                         edge_bytes_factor=2 * n_channels * 4 / 12)
+    if algorithm == "triangle_count":
+        # two supersteps over neighborhood bitsets of ceil(V/32) words
+        word_bytes = 4.0 * max(g.n_vertices // 32, 1)
+        return QuerySpec("triangle_count", 1, iterations=2,
+                         state_bytes_per_vertex=word_bytes,
+                         edge_bytes_factor=max(2 * word_bytes / 12, 1.0))
+    if algorithm == "k_core":
+        return QuerySpec("k_core", 1 if count_only else g.n_vertices,
+                         iterations=10, state_bytes_per_vertex=4.0)
     raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -29,9 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from repro.core.partition import ShardedCOO
+from repro.utils.compat import shard_map
 
 Array = jax.Array
 
@@ -40,25 +40,48 @@ Array = jax.Array
 class PregelSpec:
     """One vertex program.
 
-    message : (src_state[E], w[E]) -> msg[E]
-    combine : 'sum' | 'min' | 'max' — the message monoid
-    apply   : (old_state[Vl], agg[Vl], vertex_ids[Vl], gval) -> new_state[Vl]
-    identity: identity element of the monoid (fills vertices with no
-              incoming message)
+    message : (src_state[E], w[E]) -> msg[E] or msg[E, M]; with
+              ``needs_dst_state`` the signature is
+              (src_state, w, dst_state) — an *edge* program that can read
+              both endpoints (triangle counting intersects neighborhoods
+              this way).
+    combine : the message monoid.  Either a single op ('sum'|'min'|'max')
+              applied to the whole message, or a tuple of ``(op, width)``
+              column groups for *structured* messages: the message's last
+              axis is split into contiguous groups, each combined with its
+              own monoid (label propagation sends C sum-combined weight
+              channels next to C min-combined label channels in one
+              superstep).
+    apply   : (old_state[Vl], agg, vertex_ids[Vl], gval) -> new_state
+    identity: identity element of the monoid — a scalar, or a tuple of
+              per-group identities matching a grouped ``combine`` (fills
+              vertices with no incoming message)
     halt    : optional (old, new, valid[Vl]) -> bool array (per-shard
               "locally converged"); None runs exactly ``max_iters``.
     global_value : optional (state[Vl], ids, valid) -> scalar partial;
               summed across vertex shards and fed to ``apply`` as ``gval``
               (PageRank uses this for the dangling-mass redistribution —
               the one pattern a pure message-passing model can't express).
+
+    Vertex state may be 1-D ``[Vl]`` or N-D ``[Vl, ...]`` (triangle
+    counting keeps a packed neighborhood bitset per vertex); padding-slot
+    freezing broadcasts over the trailing axes.
     """
 
-    message: Callable[[Array, Array], Array]
-    combine: str
+    message: Callable[..., Array]
+    combine: object
     apply: Callable[[Array, Array, Array, Array], Array]
-    identity: float
+    identity: object
     halt: Optional[Callable[[Array, Array, Array], Array]] = None
     global_value: Optional[Callable[[Array, Array, Array], Array]] = None
+    needs_dst_state: bool = False
+
+
+def converged_halt(old, new, valid):
+    """The standard fixpoint predicate: no valid vertex changed state.
+    Shared by every to-convergence vertex program (CC, traversal, LPA,
+    k-core peeling)."""
+    return jnp.logical_not(jnp.any(jnp.logical_and(valid, new != old)))
 
 
 _SEG = {
@@ -79,7 +102,18 @@ def _psum_like(x: Array, op: str, axis) -> Array:
 
 
 def _local_combine(msgs, dst, n_vertices, v_local, start, op, identity):
-    """Segment-combine messages into the locally-owned vertex range."""
+    """Segment-combine messages into the locally-owned vertex range.
+
+    Grouped ``op`` splits the message's last axis into ``(op, width)``
+    column groups, each combined under its own monoid.
+    """
+    if isinstance(op, tuple):
+        parts, c0 = [], 0
+        for (o, width), ident in zip(op, identity):
+            parts.append(_local_combine(msgs[..., c0:c0 + width], dst,
+                                        n_vertices, v_local, start, o, ident))
+            c0 += width
+        return jnp.concatenate(parts, axis=-1)
     local_dst = jnp.where(dst >= n_vertices, v_local, dst - start)
     local_dst = jnp.clip(local_dst, 0, v_local)
     agg = _SEG[op](msgs, local_dst, num_segments=v_local + 1)[:v_local]
@@ -90,6 +124,17 @@ def _local_combine(msgs, dst, n_vertices, v_local, start, op, identity):
                              local_dst, num_segments=v_local + 1)[:v_local] == 0
         agg = jnp.where(no_msg, jnp.asarray(identity, agg.dtype), agg)
     return agg
+
+
+def _shard_combine(agg, op, axis):
+    """Cross-shard merge of partial aggregates (grouped ops column-wise)."""
+    if isinstance(op, tuple):
+        parts, c0 = [], 0
+        for o, width in op:
+            parts.append(_psum_like(agg[..., c0:c0 + width], o, axis))
+            c0 += width
+        return jnp.concatenate(parts, axis=-1)
+    return _psum_like(agg, op, axis)
 
 
 _JIT_CACHE: dict = {}
@@ -130,11 +175,16 @@ def run_pregel(
                 full = lax.all_gather(state, axis_model, tiled=True)
             else:
                 full = state
-            msgs = spec.message(full[jnp.clip(src, 0, full.shape[0] - 1)], w)
+            src_state = full[jnp.clip(src, 0, full.shape[0] - 1)]
+            if spec.needs_dst_state:
+                dst_state = full[jnp.clip(dst, 0, full.shape[0] - 1)]
+                msgs = spec.message(src_state, w, dst_state)
+            else:
+                msgs = spec.message(src_state, w)
             agg = _local_combine(msgs, dst, V, v_local, start,
                                  spec.combine, spec.identity)
             if dist:
-                agg = _psum_like(agg, spec.combine, axis_data)
+                agg = _shard_combine(agg, spec.combine, axis_data)
             if spec.global_value is not None:
                 gval = spec.global_value(state, ids, valid)
                 if sharded and dist:
@@ -142,7 +192,8 @@ def run_pregel(
             else:
                 gval = jnp.float32(0.0)
             new = spec.apply(state, agg, ids, gval)
-            new = jnp.where(valid, new, state)  # freeze padding slots
+            vmask = valid.reshape(valid.shape + (1,) * (new.ndim - 1))
+            new = jnp.where(vmask, new, state)  # freeze padding slots
             return new
 
         if spec.halt is None:

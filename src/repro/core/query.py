@@ -21,7 +21,15 @@ from repro.core.engines import LocalEngine, DistributedEngine, QueryResult
 
 @dataclasses.dataclass(frozen=True)
 class GraphQuery:
-    algorithm: str                      # pagerank | connected_components | two_hop | degree_stats
+    """One declarative query; ``algorithm`` is any name ``planner.spec_for``
+    knows: pagerank | connected_components | two_hop | degree_stats |
+    bfs | sssp | label_propagation | triangle_count | k_core.
+
+    ``count_only=True`` selects the engine's count-only fast path (the
+    paper's '<2 s count vs ~10 min table' query class) where one exists.
+    """
+
+    algorithm: str
     count_only: bool = False
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -41,6 +49,36 @@ class GraphQuery:
     @classmethod
     def degree_stats(cls):
         return cls("degree_stats", True, {})
+
+    @classmethod
+    def bfs(cls, sources, count_only=False, max_iters=None):
+        """Hop distances from a source set; ``count_only`` returns the
+        size of the reachable set instead of the distance table.
+        ``max_iters=None`` guarantees convergence."""
+        return cls("bfs", count_only,
+                   {"sources": tuple(sources), "max_iters": max_iters})
+
+    @classmethod
+    def sssp(cls, source: int, max_iters=None):
+        """Single-source weighted shortest paths (non-negative weights)."""
+        return cls("sssp", False, {"source": source, "max_iters": max_iters})
+
+    @classmethod
+    def label_propagation(cls, count_only=False, max_iters=30,
+                          n_channels=64):
+        """Community detection; ``count_only`` returns ``num_communities``."""
+        return cls("label_propagation", count_only,
+                   {"max_iters": max_iters, "n_channels": n_channels})
+
+    @classmethod
+    def triangle_count(cls):
+        """Global triangle count (inherently count-only)."""
+        return cls("triangle_count", True, {})
+
+    @classmethod
+    def k_core(cls, k: int, count_only=False, max_iters=None):
+        """k-core membership; ``count_only`` returns the core size."""
+        return cls("k_core", count_only, {"k": k, "max_iters": max_iters})
 
 
 class GraphPlatform:
@@ -82,7 +120,8 @@ class GraphPlatform:
         return self._dist
 
     def plan(self, q: GraphQuery) -> P.Plan:
-        spec = P.spec_for(q.algorithm, self.stats, count_only=q.count_only)
+        spec = P.spec_for(q.algorithm, self.stats, count_only=q.count_only,
+                          n_channels=q.params.get("n_channels", 64))
         plan = P.choose_engine(self.stats, spec, self.n_chips)
         if self.force_engine:
             plan = dataclasses.replace(plan, engine=self.force_engine,
@@ -105,6 +144,25 @@ class GraphPlatform:
                                       dedup=q.params.get("dedup", True))
         elif q.algorithm == "degree_stats":
             r = eng.degree_stats()
+        elif q.algorithm == "bfs":
+            sources = list(q.params["sources"])
+            max_iters = q.params.get("max_iters")
+            r = (eng.reachable_count(sources, max_iters=max_iters)
+                 if q.count_only else eng.bfs(sources, max_iters=max_iters))
+        elif q.algorithm == "sssp":
+            r = eng.sssp(q.params["source"],
+                         max_iters=q.params.get("max_iters"))
+        elif q.algorithm == "label_propagation":
+            kw = {"max_iters": q.params.get("max_iters", 30),
+                  "n_channels": q.params.get("n_channels", 64)}
+            r = (eng.num_communities(**kw) if q.count_only
+                 else eng.label_propagation(**kw))
+        elif q.algorithm == "triangle_count":
+            r = eng.triangle_count()
+        elif q.algorithm == "k_core":
+            kw = {"max_iters": q.params.get("max_iters")}
+            r = (eng.k_core_size(q.params["k"], **kw) if q.count_only
+                 else eng.k_core(q.params["k"], **kw))
         else:
             raise ValueError(q.algorithm)
         r.meta["plan"] = plan

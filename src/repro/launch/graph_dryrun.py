@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 from jax import lax
+
+from repro.utils.compat import shard_map
 
 from repro.launch.mesh import make_production_mesh, n_chips
 from repro.utils import roofline as RL

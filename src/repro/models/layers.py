@@ -213,18 +213,27 @@ def attn_ring(q, k, v, *, mesh, axis: str = "model", batch_axes=("data",),
     logically global.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.utils.compat import shard_map, axis_size
 
     b, s, hq, dh = q.shape
     hkv = k.shape[2]
     g = hq // hkv
     bspec = tuple(batch_axes) if batch_axes else None
 
+    # With no causal/window masking the positions are dead code, but old
+    # jax lowers the leftover axis_index to a PartitionId the SPMD
+    # partitioner rejects — skip computing them entirely.
+    needs_pos = causal or not (isinstance(window, int) and window == 0)
+
     def body(q_l, k_l, v_l):
-        M = lax.axis_size(axis)
-        m_idx = lax.axis_index(axis)
+        M = axis_size(axis)
         bl, s_loc = q_l.shape[0], q_l.shape[1]
-        qpos = m_idx * s_loc + jnp.arange(s_loc, dtype=jnp.int32)
+        if needs_pos:
+            m_idx = lax.axis_index(axis)
+            qpos = m_idx * s_loc + jnp.arange(s_loc, dtype=jnp.int32)
+        else:
+            m_idx = 0
+            qpos = jnp.zeros(s_loc, dtype=jnp.int32)
         qf = (q_l * jnp.asarray(dh ** -0.5, q_l.dtype))             .reshape(bl, s_loc, hkv, g, dh).transpose(0, 2, 3, 1, 4)
         m0 = jnp.full((bl, hkv, g, s_loc, 1), NEG_INF, jnp.float32)
         l0 = jnp.zeros((bl, hkv, g, s_loc, 1), jnp.float32)
@@ -243,7 +252,7 @@ def attn_ring(q, k, v, *, mesh, axis: str = "model", batch_axes=("data",),
 
         ((_, _), (m_f, l_f, acc)), _ = lax.scan(
             stage, ((k_l, v_l), (m0, l0, a0)),
-            jnp.arange(lax.axis_size(axis)))
+            jnp.arange(axis_size(axis)))
         out = acc / jnp.where(l_f > 0, l_f, 1.0)
         # [B,Hkv,G,Sq,Dh] -> [B,Sq,Hq,Dh]
         out = out.transpose(0, 3, 1, 2, 4).reshape(bl, s_loc, hq, dh)

@@ -1,0 +1,71 @@
+"""Version-compat shims over the moving parts of the jax API.
+
+The repo targets the jax that ships in the container; the two APIs that
+moved across releases are wrapped here so every call site stays on the
+newest spelling:
+
+* ``shard_map`` — top-level ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (<= 0.4.x), and the replication
+  -check kwarg rename ``check_rep`` -> ``check_vma``.
+* ``make_mesh`` — ``axis_types=`` only exists once ``jax.sharding.AxisType``
+  does; older jax simply has no explicit/auto axis distinction.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional
+
+import jax
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax <= 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with the replication-check kwarg normalized.
+
+    ``check_vma`` follows the current jax spelling; on older jax it is
+    forwarded as ``check_rep`` (same semantics: disable the static
+    replication checker, required for manual psum/all_gather bodies).
+    """
+    kw = {}
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kw["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` where it exists; ``psum(1, axis)`` (which
+    constant-folds for literal ints) on older jax."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the CompilerParams /
+    TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -1,0 +1,326 @@
+"""Algorithm-suite tests: every new vertex program vs its pure-numpy
+oracle on random graphs, identical results on LocalEngine and
+DistributedEngine, count-only fast paths, and the structured-message
+pregel machinery itself.  Real multi-device mesh coverage runs in a
+subprocess (XLA device flags must precede jax init).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.engines import DistributedEngine, LocalEngine
+from repro.core.partition import partition_1d
+from repro.core.pregel import PregelSpec, run_pregel
+from repro.core.query import GraphPlatform, GraphQuery
+from repro.core.algorithms.traversal import (
+    bfs_distances, bfs_reference, reachable_count, sssp, sssp_reference)
+from repro.core.algorithms.community import (
+    communities_reference, label_propagation, num_communities)
+from repro.core.algorithms.triangles import (
+    core_size, k_core, k_core_reference, triangle_count,
+    triangle_count_reference)
+from repro.data import synthetic as S
+
+
+def _edges(g):
+    return (np.asarray(g.src)[: g.n_edges], np.asarray(g.dst)[: g.n_edges],
+            np.asarray(g.w)[: g.n_edges])
+
+
+@pytest.fixture(scope="module")
+def digraph():
+    src, dst = S.user_follow_graph(600, 4.0, seed=13)
+    return G.build_coo(src, dst, 600)
+
+
+@pytest.fixture(scope="module")
+def sym_graph():
+    src, dst = S.user_follow_graph(600, 4.0, seed=13)
+    keep = src != dst
+    return G.build_coo(src[keep], dst[keep], 600, symmetrize=True)
+
+
+# ------------------------------------------------------------- oracles
+
+def test_bfs_matches_queue_oracle(digraph):
+    s, d, _ = _edges(digraph)
+    for sources in ([0], [1, 17, 200]):
+        dist, _ = bfs_distances(digraph, sources)
+        ref = bfs_reference(s, d, digraph.n_vertices, sources)
+        np.testing.assert_array_equal(np.asarray(dist), ref)
+
+
+def test_bfs_converges_past_default_small_world_depth():
+    """A 200-vertex path graph needs 199 relaxation rounds — the default
+    max_iters=None must reach the fixpoint instead of truncating the
+    tail of the distance table to inf."""
+    n = 200
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    g = G.build_coo(src, dst, n)
+    dist, iters = bfs_distances(g, [0])
+    np.testing.assert_array_equal(np.asarray(dist), np.arange(n, dtype=np.float32))
+    assert reachable_count(dist) == n
+    # explicit truncation is opt-in and documented
+    dist_t, _ = bfs_distances(g, [0], max_iters=10)
+    assert reachable_count(dist_t) == 11
+
+
+def test_bfs_reachable_count(digraph):
+    dist, _ = bfs_distances(digraph, [0])
+    assert reachable_count(dist) == int(np.isfinite(np.asarray(dist)).sum())
+
+
+def test_sssp_matches_dijkstra():
+    rng = np.random.default_rng(4)
+    src, dst = S.user_follow_graph(500, 4.0, seed=21)
+    w = rng.random(src.shape[0]).astype(np.float32) + 0.05
+    g = G.build_coo(src, dst, 500, w=w)
+    s, d, ww = _edges(g)
+    dist, _ = sssp(g, 7)
+    ref = sssp_reference(s, d, ww, 500, 7)
+    np.testing.assert_allclose(np.asarray(dist), ref, atol=1e-5)
+
+
+def test_label_propagation_on_disjoint_cliques():
+    """Ground-truth communities = connected components (disjoint
+    cliques): LPA must produce exactly one label per clique, matching
+    the union-find oracle's partition."""
+    es, ed, off = [], [], 0
+    for size in [5, 9, 2, 14, 3, 7]:
+        a, b = np.triu_indices(size, k=1)
+        es.append(a + off)
+        ed.append(b + off)
+        off += size
+    es, ed = np.concatenate(es), np.concatenate(ed)
+    g = G.build_coo(es, ed, off, symmetrize=True)
+    labels, _ = label_propagation(g)
+    labels = np.asarray(labels)
+    comp = communities_reference(es, ed, off)
+    comp_to_labels = {}
+    for v in range(off):
+        # labels are vertex ids and never cross component boundaries
+        assert comp[labels[v]] == comp[v]
+        comp_to_labels.setdefault(comp[v], set()).add(labels[v])
+    assert all(len(ls) == 1 for ls in comp_to_labels.values())
+    assert num_communities(jnp.asarray(labels)) == 6
+
+
+def test_label_propagation_deterministic(sym_graph):
+    a, _ = label_propagation(sym_graph)
+    b, _ = label_propagation(sym_graph)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_triangle_count_matches_dense_matmul():
+    for seed in (0, 5):
+        src, dst = S.user_follow_graph(150, 6.0, seed=seed)
+        keep = src != dst
+        g = G.build_coo(src[keep], dst[keep], 150, symmetrize=True)
+        s, d, _ = _edges(g)
+        count, per_vertex = triangle_count(g)
+        assert count == triangle_count_reference(s, d, 150)
+        assert int(per_vertex.sum()) == 6 * count
+
+
+def test_triangle_count_known_graph():
+    # K4 has exactly 4 triangles
+    a, b = np.triu_indices(4, k=1)
+    g = G.build_coo(a, b, 4, symmetrize=True)
+    count, _ = triangle_count(g)
+    assert count == 4
+
+
+def test_triangle_count_ignores_self_loops():
+    # K4 + self-loops on every vertex: still exactly 4 triangles
+    a, b = np.triu_indices(4, k=1)
+    loops = np.arange(4)
+    g = G.build_coo(np.concatenate([a, loops]),
+                    np.concatenate([b, loops]), 4, symmetrize=True)
+    count, _ = triangle_count(g)
+    assert count == 4
+
+
+def test_undirected_algorithms_reject_directed_graphs():
+    """On a directed edge list these would return silently wrong results
+    (a directed 3-cycle has no symmetric edges, so 0 triangles / empty
+    2-core) — they must raise instead."""
+    g = G.build_coo(np.array([0, 1, 2]), np.array([1, 2, 0]), 3)
+    with pytest.raises(ValueError, match="symmetriz"):
+        triangle_count(g)
+    with pytest.raises(ValueError, match="symmetriz"):
+        k_core(g, 2)
+    with pytest.raises(ValueError, match="symmetriz"):
+        label_propagation(g)
+    # the documented escape hatch for manually-symmetric edge lists
+    gm = G.build_coo(np.array([0, 1]), np.array([1, 0]), 2)
+    gm.symmetric = True
+    count, _ = triangle_count(gm)
+    assert count == 0
+
+
+def test_k_core_matches_peeling_oracle(sym_graph):
+    s, d, _ = _edges(sym_graph)
+    for k in (2, 3, 5):
+        members, _ = k_core(sym_graph, k)
+        ref = k_core_reference(s, d, sym_graph.n_vertices, k)
+        np.testing.assert_array_equal(np.asarray(members), ref)
+        assert core_size(members) == int(ref.sum())
+
+
+# ---------------------------------------- engine parity (partitioned path)
+
+def test_local_and_distributed_engines_agree(sym_graph, digraph):
+    """The acceptance bar: every new algorithm, identical results on
+    both engines (the distributed engine runs the 4-way edge-partitioned
+    program; on one device that still exercises shard packing/sentinels).
+    """
+    lo_d, di_d = LocalEngine(digraph), DistributedEngine(digraph, n_data=4)
+    lo_s, di_s = LocalEngine(sym_graph), DistributedEngine(sym_graph, n_data=4)
+    np.testing.assert_array_equal(
+        np.asarray(lo_d.bfs([0, 3]).value), np.asarray(di_d.bfs([0, 3]).value))
+    np.testing.assert_allclose(
+        np.asarray(lo_d.sssp(2).value), np.asarray(di_d.sssp(2).value),
+        atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(lo_s.label_propagation().value),
+        np.asarray(di_s.label_propagation().value))
+    assert lo_s.triangle_count().value == di_s.triangle_count().value
+    np.testing.assert_array_equal(
+        np.asarray(lo_s.k_core(3).value), np.asarray(di_s.k_core(3).value))
+
+
+def test_count_only_fast_paths(sym_graph, digraph):
+    lo_d, lo_s = LocalEngine(digraph), LocalEngine(sym_graph)
+    dist = np.asarray(lo_d.bfs([0]).value)
+    assert lo_d.reachable_count([0]).value == int(np.isfinite(dist).sum())
+    labels = np.asarray(lo_s.label_propagation().value)
+    assert lo_s.num_communities().value == len(np.unique(labels))
+    members = np.asarray(lo_s.k_core(3).value)
+    assert lo_s.k_core_size(3).value == int(members.sum())
+
+
+# --------------------------------------------------- unified query layer
+
+def test_platform_routes_new_algorithms(sym_graph):
+    plat = GraphPlatform(sym_graph, n_data=4)
+    queries = [GraphQuery.bfs([0]), GraphQuery.bfs([0], count_only=True),
+               GraphQuery.sssp(1), GraphQuery.label_propagation(),
+               GraphQuery.label_propagation(count_only=True),
+               GraphQuery.triangle_count(), GraphQuery.k_core(3),
+               GraphQuery.k_core(3, count_only=True)]
+    for q in queries:
+        r = plat.query(q)
+        plan = r.meta["plan"]
+        assert plan.engine in ("local", "distributed")
+        assert plan.est_local_s > 0 and plan.est_dist_s > 0
+        if q.count_only or q.algorithm == "triangle_count":
+            assert isinstance(r.value, int)
+
+
+def test_platform_query_values_match_engines(sym_graph):
+    plat = GraphPlatform(sym_graph)
+    eng = LocalEngine(sym_graph)
+    r = plat.query(GraphQuery.k_core(4, count_only=True))
+    assert r.value == eng.k_core_size(4).value
+
+
+# -------------------------------------- structured-message pregel engine
+
+def test_pregel_grouped_combine_mixed_monoids():
+    """One superstep with a (sum, min) column-grouped message must equal
+    per-monoid numpy segment aggregation."""
+    rng = np.random.default_rng(8)
+    V, E = 40, 200
+    src = rng.integers(0, V, E).astype(np.int64)
+    dst = rng.integers(0, V, E).astype(np.int64)
+    w = rng.random(E).astype(np.float32)
+    g = G.build_coo(src, dst, V, w=w, dedup=False)
+    sg = partition_1d(g, 1)
+    spec = PregelSpec(
+        message=lambda x, w: jnp.stack([w, w], axis=-1),
+        combine=(("sum", 1), ("min", 1)),
+        apply=lambda old, agg, ids, gval: agg,
+        identity=(0.0, float("inf")),
+    )
+    state, _ = run_pregel(spec, sg, jnp.zeros((V, 2)), max_iters=1)
+    state = np.asarray(state)
+    s, d, ww = _edges(g)
+    want_sum = np.zeros(V, np.float32)
+    want_min = np.full(V, np.inf, np.float32)
+    np.add.at(want_sum, d, ww)
+    np.minimum.at(want_min, d, ww)
+    np.testing.assert_allclose(state[:, 0], want_sum, rtol=1e-5)
+    np.testing.assert_allclose(state[:, 1], want_min, rtol=1e-6)
+
+
+def test_pregel_dst_state_messages():
+    """Edge programs reading both endpoints: sum of dst's own id over
+    in-edges == in_degree * id."""
+    src = np.array([0, 1, 2, 0])
+    dst = np.array([1, 2, 0, 2])
+    g = G.build_coo(src, dst, 3)
+    sg = partition_1d(g, 1)
+    spec = PregelSpec(
+        message=lambda s, w, d: d,
+        combine="sum",
+        apply=lambda old, agg, ids, gval: agg,
+        identity=0.0,
+        needs_dst_state=True,
+    )
+    init = jnp.arange(3, dtype=jnp.float32)
+    state, _ = run_pregel(spec, sg, init, max_iters=1)
+    indeg = np.bincount(dst, minlength=3)
+    np.testing.assert_allclose(np.asarray(state), indeg * np.arange(3))
+
+
+# ------------------------------------------------- real multi-device mesh
+
+MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+    import numpy as np, jax.numpy as jnp
+    from repro.core import graph as G
+    from repro.core.algorithms.traversal import bfs_distances, bfs_reference
+    from repro.core.algorithms.community import label_propagation
+    from repro.core.algorithms.triangles import (
+        triangle_count, triangle_count_reference, k_core, k_core_reference)
+    from repro.data import synthetic as S
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 2), ('data', 'model'))
+    src, dst = S.user_follow_graph(300, 5.0, seed=3)
+    keep = src != dst
+    g = G.build_coo(src[keep], dst[keep], 300, symmetrize=True)
+    s = np.asarray(g.src)[:g.n_edges]; d = np.asarray(g.dst)[:g.n_edges]
+
+    ref_bfs = bfs_reference(s, d, 300, [0])
+    lab1, _ = label_propagation(g)
+    ref_tri = triangle_count_reference(s, d, 300)
+    ref_core = k_core_reference(s, d, 300, 3)
+    for nd, nm in [(4, 1), (4, 2)]:
+        dist, _ = bfs_distances(g, [0], mesh=mesh, n_data=nd, n_model=nm)
+        assert np.array_equal(np.asarray(dist), ref_bfs), ('bfs', nd, nm)
+        lab, _ = label_propagation(g, mesh=mesh, n_data=nd, n_model=nm)
+        assert np.array_equal(np.asarray(lab), np.asarray(lab1)), ('lpa', nd, nm)
+        tri, _ = triangle_count(g, mesh=mesh, n_data=nd, n_model=nm)
+        assert tri == ref_tri, ('tri', nd, nm)
+        core, _ = k_core(g, 3, mesh=mesh, n_data=nd, n_model=nm)
+        assert np.array_equal(np.asarray(core), ref_core), ('core', nd, nm)
+    print('ALGO_MESH_OK')
+""")
+
+
+def test_algorithms_on_multi_device_mesh():
+    """BFS/LPA/triangles/k-core on an 8-device mesh, 1-D (replicated)
+    and 2-D (vertex-sharded) layouts, against single-device results."""
+    r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"})
+    assert "ALGO_MESH_OK" in r.stdout, r.stderr[-2000:]

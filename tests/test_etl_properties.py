@@ -1,0 +1,49 @@
+"""Hypothesis property tests for the ETL structural invariants.
+
+``hypothesis`` is an *optional* test dependency (declared under the
+``test`` extra in pyproject.toml); the whole module skips cleanly when
+it is not installed so the tier-1 suite still collects.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep: hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import graph as G  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_edges=st.integers(1, 300),
+    n_vertices=st.integers(2, 50),
+    cap=st.integers(1, 20),
+    seed=st.integers(0, 10**6),
+)
+def test_ell_invariants(n_edges, n_vertices, cap, seed):
+    """(1) retained <= total; (2) per-row degree <= cap; (3) retained =
+    sum of min(indeg, cap); (4) lost_fraction in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    ell = G.build_ell(src, dst, n_vertices, cap)
+    assert ell.n_edges <= ell.n_edges_total == n_edges
+    per_row = np.asarray(ell.mask).sum(axis=1)
+    assert (per_row <= cap).all()
+    indeg = np.bincount(dst, minlength=n_vertices)
+    assert ell.n_edges == int(np.minimum(indeg, cap).sum())
+    assert 0.0 <= ell.lost_fraction <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 60))
+def test_coo_symmetrize_property(seed, n):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(1, 100)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    g = G.build_coo(src, dst, n, symmetrize=True)
+    s = np.asarray(g.src)[:g.n_edges]
+    d = np.asarray(g.dst)[:g.n_edges]
+    fwd = set(zip(s.tolist(), d.tolist()))
+    assert all((b, a) in fwd for a, b in fwd)   # symmetric closure

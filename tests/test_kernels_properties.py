@@ -1,0 +1,31 @@
+"""Hypothesis property tests for the Pallas kernels (optional dep)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep: hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.ell_combine.ops import ell_spmv  # noqa: E402
+from repro.kernels.ell_combine.ref import ell_combine_ref  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.integers(1, 80),
+    k=st.integers(1, 40),
+    density=st.floats(0.0, 1.0),
+    op=st.sampled_from(["sum", "min", "max"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_combine_property(v, k, density, op, seed):
+    """Kernel == oracle for arbitrary shapes/masks (hypothesis)."""
+    rng = np.random.default_rng(seed)
+    vx = v + rng.integers(1, 50)
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < density)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(vx), jnp.float32)
+    got = np.asarray(ell_spmv(nbr, mask, w, x, op=op))
+    want = np.asarray(ell_combine_ref(nbr, mask, w, x, op=op))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -65,3 +65,62 @@ def test_cost_estimates_positive_and_ordered():
     tl = P.estimate_local_cost(g, q)
     td = P.estimate_dist_cost(g, q, 256)
     assert tl > 0 and td > 0
+
+
+ALL_ALGORITHMS = ["pagerank", "connected_components", "two_hop",
+                  "degree_stats", "bfs", "sssp", "label_propagation",
+                  "triangle_count", "k_core"]
+
+
+@pytest.mark.parametrize("algorithm", ALL_ALGORITHMS)
+def test_spec_and_plan_exist_for_every_algorithm(algorithm):
+    """Every workload behind the unified layer has a cost spec and
+    produces a Plan with finite distributed cost."""
+    g = _stats(1_000_000, 5_000_000)
+    for count_only in (False, True):
+        q = P.spec_for(algorithm, g, count_only=count_only)
+        assert q.iterations >= 1 and q.output_rows >= 1
+        plan = P.choose_engine(g, q, 256)
+        assert plan.engine in ("local", "distributed")
+        assert plan.est_dist_s > 0 and plan.est_dist_s != float("inf")
+        assert plan.reason
+
+
+@pytest.mark.parametrize("algorithm", ALL_ALGORITHMS)
+def test_every_algorithm_crosses_over_once(algorithm):
+    """The Fig. 5 shape holds per algorithm: local wins small, the
+    distributed engine wins at scale, with a single flip between."""
+    engines = []
+    for v in [10**3, 10**4, 10**5, 10**6, 10**7, 10**8, 10**9, 10**10]:
+        g = _stats(v, v * 5)
+        engines.append(P.choose_engine(g, P.spec_for(algorithm, g), 256).engine)
+    assert engines[0] == "local"
+    assert engines[-1] == "distributed"
+    assert sum(a != b for a, b in zip(engines, engines[1:])) == 1
+
+
+def test_triangle_bitset_state_crosses_before_scalar_programs():
+    """Triangle counting's O(V/32)-word state makes it leave the local
+    engine at smaller V than scalar-state programs on the same graph."""
+    def crossover(algorithm):
+        for v in [10**3, 10**4, 10**5, 10**6, 10**7, 10**8, 10**9, 10**10]:
+            g = _stats(v, v * 5)
+            if P.choose_engine(g, P.spec_for(algorithm, g), 256).engine \
+                    == "distributed":
+                return v
+        return None
+    assert crossover("triangle_count") < crossover("connected_components")
+
+
+def test_platform_plan_for_new_queries():
+    """GraphQuery -> Plan through the platform without running engines."""
+    from repro.core import graph as G
+    from repro.core.query import GraphPlatform, GraphQuery
+    import numpy as np
+    src = np.array([0, 1, 2]); dst = np.array([1, 2, 0])
+    plat = GraphPlatform(G.build_coo(src, dst, 3, symmetrize=True))
+    for q in [GraphQuery.bfs([0]), GraphQuery.sssp(0),
+              GraphQuery.label_propagation(), GraphQuery.triangle_count(),
+              GraphQuery.k_core(2)]:
+        plan = plat.plan(q)
+        assert plan.engine == "local"   # tiny graph

@@ -117,8 +117,9 @@ GRID_SCRIPT = textwrap.dedent("""
     import os
     os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
     import numpy as np, jax, jax.numpy as jnp
-    from jax import lax, shard_map
+    from jax import lax
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.utils.compat import shard_map
     from repro.launch.mesh import make_mesh
     from repro.core.graph import round_up
 
