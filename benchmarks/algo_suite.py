@@ -1,8 +1,10 @@
 """Algorithm-suite sweep: per-workload local-vs-distributed crossover in
 the Fig. 5 style, across the full vertex-program library.
 
-For every algorithm behind the unified query layer this measures, at
-each graph scale:
+The suite is *registry-driven*: it iterates every ``AlgorithmDef`` with
+an ``example_params`` entry, so a newly registered algorithm shows up in
+the sweep (and in the local==distributed parity assertion) without any
+edit here.  For every algorithm this measures, at each graph scale:
 
   * LocalEngine wall time (the Neo4j-analogue interactive path);
   * DistributedEngine wall time (edge-partitioned BSP, n_data=4 — on a
@@ -24,25 +26,9 @@ import numpy as np
 from benchmarks.common import time_fn, csv_row
 from repro.core import graph as G
 from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.engines import LocalEngine, DistributedEngine
-from repro.core.query import GraphQuery
 from repro.data import synthetic as S
-
-
-# (name, engine-method runner, count-only runner or None, needs symmetric)
-_SUITE = [
-    ("bfs", lambda e: e.bfs([0]).value,
-     lambda e: e.reachable_count([0]).value, False),
-    ("sssp", lambda e: e.sssp(0).value, None, False),
-    ("pagerank", lambda e: e.pagerank(max_iters=20).value, None, False),
-    ("connected_components", lambda e: e.connected_components().value,
-     lambda e: e.num_components().value, True),
-    ("label_propagation", lambda e: e.label_propagation(max_iters=15).value,
-     lambda e: e.num_communities(max_iters=15).value, True),
-    ("triangle_count", lambda e: e.triangle_count().value, None, True),
-    ("k_core", lambda e: e.k_core(3).value,
-     lambda e: e.k_core_size(3).value, True),
-]
 
 
 def _build(n_vertices: int, symmetric: bool) -> G.GraphCOO:
@@ -52,6 +38,31 @@ def _build(n_vertices: int, symmetric: bool) -> G.GraphCOO:
                        symmetrize=symmetric)
 
 
+def _suite():
+    """Registered algorithms that declared representative parameters."""
+    return [(name, defn) for name, defn in R.items()
+            if defn.example_params is not None]
+
+
+def _assert_same(name: str, a, b) -> None:
+    if isinstance(a, dict):
+        assert sorted(a) == sorted(b), name
+        for k in a:
+            _assert_same(f"{name}[{k}]", a[k], b[k])
+        return
+    if isinstance(a, tuple):
+        for x, y in zip(a, b):
+            _assert_same(name, x, y)
+        return
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, name
+    if np.issubdtype(a.dtype, np.floating):
+        # summation order differs across edge shards
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7, err_msg=name)
+    else:
+        assert (a == b).all(), name
+
+
 def run(out=print):
     rows = []
     for n_vertices in [2_000, 20_000]:
@@ -59,33 +70,36 @@ def run(out=print):
         locals_ = {sym: LocalEngine(g) for sym, g in graphs.items()}
         dists = {sym: DistributedEngine(g, n_data=4)
                  for sym, g in graphs.items()}
-        for name, table_fn, count_fn, sym in _SUITE:
+        for name, defn in _suite():
             if name == "triangle_count" and n_vertices > 5_000:
                 # O(V^2/32) bitset state: interactive-scale only on one
                 # device; the planner routes larger V distributed.
                 continue
-            t_local, r_local = time_fn(lambda: table_fn(locals_[sym]))
-            t_dist, r_dist = time_fn(lambda: table_fn(dists[sym]))
-            a, b = np.asarray(r_local), np.asarray(r_dist)
-            assert a.shape == b.shape, name
-            if np.issubdtype(a.dtype, np.floating):
-                # summation order differs across edge shards
-                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7,
-                                           err_msg=name)
-            else:
-                assert (a == b).all(), name
-            out(csv_row(f"algo_suite/{name}_local_v{n_vertices}", t_local,
-                        f"bsp_ratio={t_dist / t_local:.2f}x"))
-            if count_fn is not None:
-                t_count, _ = time_fn(lambda: count_fn(locals_[sym]))
-                out(csv_row(f"algo_suite/{name}_count_v{n_vertices}",
-                            t_count,
-                            f"count_vs_table={t_local / max(t_count, 1e-9):.2f}x"))
-            rows.append((name, n_vertices, t_local, t_dist))
+            sym = defn.requires_symmetric
+            params = dict(defn.example_params)
+            t_local, r_local = time_fn(
+                lambda: locals_[sym].run(defn, params).value)
+            out(csv_row(f"algo_suite/{name}_local_v{n_vertices}", t_local))
+            if "distributed" in defn.engines:
+                t_dist, r_dist = time_fn(
+                    lambda: dists[sym].run(defn, params).value)
+                _assert_same(name, r_local, r_dist)
+                out(csv_row(f"algo_suite/{name}_bsp_v{n_vertices}", t_dist,
+                            f"bsp_ratio={t_dist / t_local:.2f}x"))
+            if defn.has_count_path:
+                t_count, _ = time_fn(
+                    lambda: locals_[sym].run(defn, params,
+                                             count_only=True).value)
+                out(csv_row(
+                    f"algo_suite/{name}_count_v{n_vertices}", t_count,
+                    f"count_vs_table={t_local / max(t_count, 1e-9):.2f}x"))
+            rows.append((name, n_vertices, t_local))
 
     # planner-projected crossover per algorithm on the production mesh —
     # the per-workload Fig. 5 family
-    for name, _, _, _ in _SUITE:
+    for name, defn in R.items():
+        if "distributed" not in defn.engines:
+            continue
         cross = None
         for v in [10**4, 10**5, 10**6, 10**7, 10**8, 10**9, 10**10]:
             stats = P.GraphStats(v, v * 5, v * 5 * 12)

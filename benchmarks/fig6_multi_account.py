@@ -14,7 +14,6 @@ Methodology notes (single CPU host; the paper compares cluster runs):
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 
 from benchmarks.common import time_fn, time_host, csv_row

@@ -5,7 +5,6 @@ the reproduction asserts the same *structure*: monotone decreasing loss,
 zero loss above the max degree, double-digit loss at tight caps."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import csv_row
 from repro.data.etl import max_adjacent_nodes_sweep

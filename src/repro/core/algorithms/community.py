@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, converged_halt, run_pregel
 
@@ -123,6 +125,42 @@ def num_communities(labels) -> int:
     V = labels.shape[0]
     present = jnp.zeros(V, jnp.int32).at[jnp.clip(labels, 0, V - 1)].set(1)
     return int(jnp.sum(present))
+
+
+# ------------------------------------------------------------ registration
+
+def _engine_run(eng, max_iters, n_channels, self_weight):
+    return label_propagation(
+        eng.coo, max_iters=max_iters, n_channels=n_channels,
+        self_weight=self_weight, mesh=eng.mesh, sharded=eng.sharded)
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # structured messages: 2C channels of 4 bytes vs 12-byte edges
+    n_channels = params.get("n_channels") or 64
+    iters = min(15, params.get("max_iters") or 15)
+    return P.QuerySpec("label_propagation",
+                       1 if count_only else g.n_vertices,
+                       iterations=iters, state_bytes_per_vertex=4.0,
+                       edge_bytes_factor=2 * n_channels * 4 / 12)
+
+
+R.register(R.AlgorithmDef(
+    name="label_propagation",
+    run=_engine_run,
+    params=(
+        R.Param("max_iters", 30, check=lambda n: n >= 1, normalize=int),
+        R.Param("n_channels", 64, check=lambda c: c >= 1, normalize=int),
+        R.Param("self_weight", 1.0, check=lambda w: w >= 0.0,
+                normalize=float),
+    ),
+    count=num_communities,
+    count_method="num_communities",
+    cost=_cost,
+    requires_symmetric=True,
+    example_params={"max_iters": 15},
+    doc="Synchronous weighted label propagation over hash channels.",
+))
 
 
 def communities_reference(src, dst, n_vertices: int) -> np.ndarray:

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, converged_halt, run_pregel
 
@@ -83,6 +85,37 @@ def num_components(labels) -> int:
     V = labels.shape[0]
     is_root = labels == jnp.arange(V, dtype=labels.dtype)
     return int(jnp.sum(is_root))
+
+
+# ------------------------------------------------------------ registration
+
+def _engine_run(eng, max_iters):
+    return connected_components(
+        eng.coo, max_iters=max_iters, mesh=eng.mesh, sharded=eng.sharded,
+        accelerated=eng.n_model == 1)
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # pointer-jumping converges in O(log d) rounds; honour a tighter
+    # user-supplied cap (the planner must not cost a 4-superstep query
+    # at the analytic 16)
+    iters = min(16, params.get("max_iters") or 16)
+    return P.QuerySpec("connected_components",
+                       1 if count_only else g.n_vertices, iterations=iters)
+
+
+R.register(R.AlgorithmDef(
+    name="connected_components",
+    run=_engine_run,
+    params=(
+        R.Param("max_iters", 200, check=lambda n: n >= 1, normalize=int),
+    ),
+    count=num_components,
+    count_method="num_components",
+    cost=_cost,
+    requires_symmetric=True,
+    doc="Hash-to-min label propagation with pointer-jumping acceleration.",
+))
 
 
 def connected_components_reference(src, dst, n_vertices):

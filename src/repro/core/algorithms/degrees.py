@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 
 
 def degree_stats(g: G.GraphCOO) -> dict:
@@ -18,6 +20,17 @@ def degree_stats(g: G.GraphCOO) -> dict:
         "mean_degree": float(g.n_edges / max(g.n_vertices, 1)),
         "dangling": int(jnp.sum(outd == 0)),
     }
+
+
+# ------------------------------------------------------------ registration
+
+R.register(R.AlgorithmDef(
+    name="degree_stats",
+    run=lambda eng: (degree_stats(eng.coo), None),
+    cost=lambda g, params, count_only: P.QuerySpec(
+        "degree_stats", 1, iterations=1),
+    doc="Host-side degree summary (also the planner's input).",
+))
 
 
 def degree_histogram(g: G.GraphCOO, n_bins: int = 64):

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, run_pregel
 
@@ -86,6 +88,41 @@ def pagerank(
                     1.0 / V, jnp.float32)
     state, iters = run_pregel(spec, sharded, init, max_iters, mesh=mesh)
     return state[:V], iters
+
+
+# ------------------------------------------------------------ registration
+
+def _engine_run(eng, alpha, tol, max_iters):
+    """Registry runner: the 1/outdeg-normalized partition is derived
+    state both engines cache across queries."""
+    key = "pagerank/normalized"
+    if key not in eng.cache:
+        eng.cache[key] = _normalize_and_partition(
+            eng.coo, eng.n_data, eng.n_model)
+    sharded, dangling = eng.cache[key]
+    return pagerank(eng.coo, alpha=alpha, tol=tol, max_iters=max_iters,
+                    mesh=eng.mesh, sharded=sharded, dangling=dangling)
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # power iteration typically converges well before the cap
+    iters = min(40, params.get("max_iters") or 40)
+    return P.QuerySpec("pagerank", 1 if count_only else g.n_vertices,
+                       iterations=iters)
+
+
+R.register(R.AlgorithmDef(
+    name="pagerank",
+    run=_engine_run,
+    params=(
+        R.Param("alpha", 0.85, check=lambda a: 0.0 < a < 1.0),
+        R.Param("tol", 1e-8, check=lambda t: t > 0.0),
+        R.Param("max_iters", 100, check=lambda n: n >= 1, normalize=int),
+    ),
+    cost=_cost,
+    example_params={"max_iters": 20},
+    doc="Power-iteration PageRank with dangling-mass redistribution.",
+))
 
 
 def pagerank_reference(src, dst, n_vertices, alpha=0.85, tol=1e-8, max_iters=100):

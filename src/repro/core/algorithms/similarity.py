@@ -11,8 +11,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 
 
 @partial(jax.jit, static_argnames=())
@@ -36,3 +39,35 @@ def jaccard_similarity(ell: G.GraphELL, u: jax.Array, v: jax.Array):
     dv = jnp.sum(ell.mask[v], axis=1).astype(jnp.float32)
     union = du + dv - inter
     return jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
+
+
+# ------------------------------------------------------------ registration
+
+def _vertex_batch(x):
+    return tuple(int(i) for i in np.atleast_1d(np.asarray(x)))
+
+
+def _engine_run(eng, u, v):
+    return jaccard_similarity(eng.ell, jnp.asarray(u, jnp.int32),
+                              jnp.asarray(v, jnp.int32)), None
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    rows = len(params.get("u") or (1,))
+    return P.QuerySpec("jaccard", rows, iterations=1, row_bytes=4)
+
+
+R.register(R.AlgorithmDef(
+    name="jaccard",
+    run=_engine_run,
+    params=(
+        R.Param("u", R.REQUIRED, normalize=_vertex_batch),
+        R.Param("v", R.REQUIRED, normalize=_vertex_batch),
+    ),
+    cost=_cost,
+    # the batched ELL-row intersection is an interactive single-device
+    # workload — the capability flag keeps the planner honest about it
+    engines=("local",),
+    example_params={"u": (0, 1), "v": (1, 2)},
+    doc="Jaccard similarity for (u[i], v[i]) vertex pairs on ELL rows.",
+))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, converged_halt, run_pregel
 
@@ -101,6 +103,76 @@ def reachable_count(dist) -> int:
     """Count-only fast path: |{v : dist[v] < inf}| — never materializes
     the distance table on the host."""
     return int(jnp.sum(jnp.isfinite(dist)))
+
+
+# ------------------------------------------------------------ registration
+#
+# BFS and SSSP register their PregelSpec *as* the runner: the generic
+# engine drives run_pregel, and the definition only supplies the initial
+# state.  This is the purest "algorithm as data" form the registry
+# supports.
+
+def _bfs_init(eng, params):
+    mi = params["max_iters"]
+    if mi is None:
+        mi = eng.coo.n_vertices
+    return _init_distances(params["sources"], eng.coo.n_vertices,
+                           eng.sharded.n_pad), mi
+
+
+def _sssp_init(eng, params):
+    mi = params["max_iters"]
+    if mi is None:
+        mi = eng.coo.n_vertices
+    return _init_distances([params["source"]], eng.coo.n_vertices,
+                           eng.sharded.n_pad), mi
+
+
+def _sources_tuple(s):
+    return tuple(int(x) for x in np.atleast_1d(np.asarray(s)))
+
+
+def _bfs_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # small-world graphs: effective diameter ~ a dozen supersteps
+    iters = min(12, params.get("max_iters") or 12)
+    return P.QuerySpec("bfs", 1 if count_only else g.n_vertices,
+                       iterations=iters, state_bytes_per_vertex=4.0)
+
+
+def _sssp_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # weighted relaxation settles slower than hop distance
+    iters = min(24, params.get("max_iters") or 24)
+    return P.QuerySpec("sssp", 1 if count_only else g.n_vertices,
+                       iterations=iters, state_bytes_per_vertex=4.0)
+
+
+R.register(R.AlgorithmDef(
+    name="bfs",
+    run=_BFS_SPEC,
+    init=_bfs_init,
+    params=(
+        R.Param("sources", R.REQUIRED, normalize=_sources_tuple),
+        R.Param("max_iters", None, check=lambda n: n >= 1, normalize=int),
+    ),
+    count=reachable_count,
+    count_method="reachable_count",
+    cost=_bfs_cost,
+    example_params={"sources": (0,)},
+    doc="Hop distances from a source set along directed edges.",
+))
+
+R.register(R.AlgorithmDef(
+    name="sssp",
+    run=_SSSP_SPEC,
+    init=_sssp_init,
+    params=(
+        R.Param("source", R.REQUIRED, normalize=int),
+        R.Param("max_iters", None, check=lambda n: n >= 1, normalize=int),
+    ),
+    cost=_sssp_cost,
+    example_params={"source": 0},
+    doc="Single-source weighted shortest paths (non-negative weights).",
+))
 
 
 # ---------------------------------------------------------------- oracles

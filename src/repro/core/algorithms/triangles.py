@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, converged_halt, run_pregel
 
@@ -154,6 +156,58 @@ def k_core(
 def core_size(in_core) -> int:
     """Count-only fast path: |k-core| without materializing membership."""
     return int(jnp.sum(in_core))
+
+
+# ------------------------------------------------------------ registration
+
+def _tri_run(eng):
+    count, _per_vertex = triangle_count(eng.coo, mesh=eng.mesh,
+                                        sharded=eng.sharded)
+    return count, 2
+
+
+def _tri_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    # two supersteps over neighborhood bitsets of ceil(V/32) words
+    word_bytes = 4.0 * max(g.n_vertices // 32, 1)
+    return P.QuerySpec("triangle_count", 1, iterations=2,
+                       state_bytes_per_vertex=word_bytes,
+                       edge_bytes_factor=max(2 * word_bytes / 12, 1.0))
+
+
+R.register(R.AlgorithmDef(
+    name="triangle_count",
+    run=_tri_run,
+    cost=_tri_cost,
+    requires_symmetric=True,
+    doc="Global triangle count via bitset neighborhood intersection.",
+))
+
+
+def _kcore_run(eng, k, max_iters):
+    return k_core(eng.coo, k, max_iters=max_iters, mesh=eng.mesh,
+                  sharded=eng.sharded)
+
+
+def _kcore_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    iters = min(10, params.get("max_iters") or 10)
+    return P.QuerySpec("k_core", 1 if count_only else g.n_vertices,
+                       iterations=iters, state_bytes_per_vertex=4.0)
+
+
+R.register(R.AlgorithmDef(
+    name="k_core",
+    run=_kcore_run,
+    params=(
+        R.Param("k", R.REQUIRED, check=lambda k: k >= 1, normalize=int),
+        R.Param("max_iters", None, check=lambda n: n >= 1, normalize=int),
+    ),
+    count=core_size,
+    count_method="k_core_size",
+    cost=_kcore_cost,
+    requires_symmetric=True,
+    example_params={"k": 3},
+    doc="k-core membership via degree peeling to fixpoint.",
+))
 
 
 # ---------------------------------------------------------------- oracles

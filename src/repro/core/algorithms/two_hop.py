@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
 
 Array = jax.Array
 
@@ -121,6 +123,50 @@ def multi_account_pairs(
                      ell.n_edges, ell.n_edges_total)
     pairs, valid, count = two_hop_pairs(ell, n_users, dedup=dedup)
     return pairs, valid, count, ell
+
+
+# ------------------------------------------------------------ registration
+
+def _engine_run(eng, n_users=None, dedup=True, expected_pairs=None):
+    """Motif expansion over the engine's cached ELL adjacency — both
+    engines share the one built-once layout (padding slots are gated by
+    the mask, so no sentinel remap is needed)."""
+    pairs, valid, count = two_hop_pairs(
+        eng.ell, n_users or eng.coo.n_vertices, dedup=dedup)
+    return (pairs, valid, int(count)), None
+
+
+def _engine_count(eng, **_):
+    """Count-only fast path on *exact* COO in-degrees — identical on
+    both engines (the capped ELL degrees the local engine previously
+    used undercounted wherever the cap truncated a row)."""
+    return int(two_hop_count_upper_bound(G.in_degrees(eng.coo))), None
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+    rows = 1 if count_only else (params.get("expected_pairs")
+                                 or max(g.n_edges * 4, g.n_vertices))
+    return P.QuerySpec("two_hop", rows, iterations=1)
+
+
+R.register(R.AlgorithmDef(
+    name="two_hop",
+    run=_engine_run,
+    params=(
+        R.Param("n_users", None, check=lambda n: n >= 1, normalize=int,
+                doc="user-id space size for bipartite graphs "
+                    "(defaults to n_vertices)"),
+        R.Param("dedup", True, normalize=bool),
+        R.Param("expected_pairs", None, check=lambda n: n >= 1,
+                normalize=int, doc="planner hint: estimated output rows"),
+    ),
+    count_run=_engine_count,
+    cost=_cost,
+    method="two_hop_pairs",
+    count_method="two_hop_count",
+    example_params=None,    # output is O(V * K^2): fig6 benchmarks it
+    doc="Multi-account two-hop motif over the ELL layout.",
+))
 
 
 def two_hop_reference(user_ids, identifier_ids, n_users):

@@ -1,261 +1,182 @@
 """The two engines of the hybrid platform.
 
-``LocalEngine``        — the Neo4j analogue: one device, CSR/ELL resident
-                         in HBM, every query jit-compiled, count-only fast
-                         paths that never materialize results.
+``LocalEngine``        — the Neo4j analogue: one device, graph resident
+                         in HBM, every query jit-compiled, count-only
+                         fast paths that never materialize results.
 ``DistributedEngine``  — the Spark/GraphFrames analogue: edge-partitioned
                          BSP supersteps over a device mesh (shard_map),
                          scales to graphs and outputs that cannot live on
                          one device.
 
-Both implement the same ``Engine`` protocol so the planner can route a
-query to either — the paper's central architectural claim is that a
-production platform needs *both* (Section IV-B / Fig. 5).
+Both are the *same* generic executor (``Engine``) configured differently:
+all per-algorithm behaviour lives in the algorithm registry
+(``repro.core.registry``), and the engine only owns graph state — the
+exact COO, the cached ``ShardedCOO`` edge shards, the cached degree-capped
+ELL adjacency, and a per-algorithm memo for runner-specific state (e.g.
+PageRank's normalized partition).  ``Engine.run(defn, params)`` executes
+any registered definition; adding an algorithm therefore never touches
+this file — the paper's central architectural claim (Section III-A) that
+a production platform grows by registration, not by re-plumbing.
+
+Legacy per-algorithm methods (``eng.pagerank(...)``,
+``eng.num_components()``) still work: they dispatch through the
+registry's method table via ``__getattr__``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
-# NOTE: algorithms/__init__ re-exports functions under the submodule
-# names, so import through the full dotted path (sys.modules-safe).
-import importlib
-_pr = importlib.import_module("repro.core.algorithms.pagerank")
-_cc = importlib.import_module("repro.core.algorithms.connected_components")
-_th = importlib.import_module("repro.core.algorithms.two_hop")
-_deg = importlib.import_module("repro.core.algorithms.degrees")
-_sim = importlib.import_module("repro.core.algorithms.similarity")
-_tr = importlib.import_module("repro.core.algorithms.traversal")
-_cm = importlib.import_module("repro.core.algorithms.community")
-_tg = importlib.import_module("repro.core.algorithms.triangles")
+from repro.core.pregel import PregelSpec, run_pregel
 from repro.kernels.ell_combine import ops as ell_ops
 
 
 @dataclasses.dataclass
 class QueryResult:
-    value: object                 # scalar, array, or (pairs, valid)
+    value: object                 # scalar, array, or (pairs, valid, count)
     engine: str                   # 'local' | 'distributed'
     iterations: Optional[int] = None
     meta: dict = dataclasses.field(default_factory=dict)
 
 
-class LocalEngine:
+class Engine:
+    """Generic registry-driven executor over cached graph state."""
+
+    name = "engine"
+
+    def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
+                 n_model: int = 1, max_degree: int = 128):
+        self.coo = coo
+        self.mesh = mesh
+        self.n_data = n_data
+        self.n_model = n_model
+        self.max_degree = max_degree
+        self._sharded: Optional[ShardedCOO] = None
+        self._ell: Optional[G.GraphELL] = None
+        # Per-algorithm memo: runners stash reusable derived state here
+        # (PageRank's normalized partition, HITS' doubled-graph shards).
+        self.cache: dict = {}
+        self.n_runs = 0               # executed queries (cache-hit probe)
+
+    # -- cached graph state -------------------------------------------------
+    @property
+    def sharded(self) -> ShardedCOO:
+        """Edge shards, packed once — repeated interactive queries must
+        not repay the O(E) host-side partition."""
+        if self._sharded is None:
+            self._sharded = partition(self.coo, self.n_data, self.n_model)
+        return self._sharded
+
+    @property
+    def ell(self) -> G.GraphELL:
+        """Degree-capped ELL adjacency (in-direction), built once."""
+        if self._ell is None:
+            coo = self.coo
+            src = np.asarray(coo.src)[: coo.n_edges]
+            dst = np.asarray(coo.dst)[: coo.n_edges]
+            w = np.asarray(coo.w)[: coo.n_edges]
+            self._ell = G.build_ell(src, dst, coo.n_vertices,
+                                    self.max_degree, w=w, direction="in")
+        return self._ell
+
+    # -- generic execution --------------------------------------------------
+    def run(self, algorithm, params: Optional[dict] = None,
+            count_only: bool = False) -> QueryResult:
+        """Execute any registered algorithm on this engine's graph."""
+        defn = R.get(algorithm) if isinstance(algorithm, str) else algorithm
+        if self.name not in defn.engines:
+            raise ValueError(
+                f"{defn.name!r} supports engine(s) {defn.engines}, "
+                f"not {self.name!r}")
+        p = defn.validate(params)
+        if defn.requires_symmetric:
+            G.require_symmetric(self.coo, defn.name)
+        self.n_runs += 1
+        if count_only and defn.count_run is not None:
+            value, iters = self._invoke(defn.count_run, defn, p)
+            return QueryResult(value, self.name, iters)
+        value, iters = self._invoke(defn.run, defn, p)
+        if count_only and defn.count is not None:
+            value = defn.count(value)
+        return QueryResult(value, self.name, iters)
+
+    def _invoke(self, runner, defn: R.AlgorithmDef, params: dict):
+        if isinstance(runner, PregelSpec):
+            state, max_iters = defn.init(self, params)
+            state, iters = run_pregel(runner, self.sharded, state,
+                                      max_iters, mesh=self.mesh)
+            return state[: self.coo.n_vertices], int(iters)
+        value, iters = runner(self, **params)
+        return value, (int(iters) if iters is not None else None)
+
+    # -- registry-backed method dispatch ------------------------------------
+    def __getattr__(self, name: str):
+        # only reached when normal attribute lookup fails
+        if name.startswith("_"):
+            raise AttributeError(name)
+        entry = R.method_table().get(name)
+        if entry is None:
+            raise AttributeError(
+                f"{type(self).__name__!r} object has no attribute {name!r}")
+        defn, count_only = entry
+        order = [p.name for p in defn.params]
+
+        def call(*args, **kw):
+            if len(args) > len(order):
+                raise TypeError(
+                    f"{name}() takes at most {len(order)} positional "
+                    f"arguments ({len(args)} given)")
+            merged = dict(zip(order, args))
+            dup = set(merged) & set(kw)
+            if dup:
+                raise TypeError(
+                    f"{name}() got multiple values for {sorted(dup)}")
+            merged.update(kw)
+            return self.run(defn, merged, count_only=count_only)
+
+        call.__name__ = name
+        call.__doc__ = defn.doc
+        return call
+
+
+class LocalEngine(Engine):
     """Single-device in-memory engine (Neo4j analogue).
 
-    Holds the graph in ELL (+ the exact COO for uncapped queries).  All
-    algorithm loops run through the Pallas ``ell_combine`` kernel path
-    when shapes are TPU-tileable, else the jnp reference — same numerics.
+    Holds the graph in exact COO (+ the degree-capped ELL for motif/
+    similarity queries).  Algorithm loops run through the Pallas
+    ``ell_combine`` kernel path when shapes are TPU-tileable, else the
+    jnp reference — same numerics.
     """
 
     name = "local"
 
     def __init__(self, coo: G.GraphCOO, max_degree: int = 128,
                  use_pallas: bool = False):
-        self.coo = coo
-        src = np.asarray(coo.src)[: coo.n_edges]
-        dst = np.asarray(coo.dst)[: coo.n_edges]
-        w = np.asarray(coo.w)[: coo.n_edges]
-        self.ell = G.build_ell(src, dst, coo.n_vertices, max_degree, w=w,
-                               direction="in")
+        super().__init__(coo, mesh=None, n_data=1, n_model=1,
+                         max_degree=max_degree)
         self.use_pallas = use_pallas
         self._spmv = ell_ops.ell_spmv if use_pallas else ell_ops.ell_spmv_ref
-        self._sharded_cache = None
-
-    @property
-    def _sharded(self) -> ShardedCOO:
-        """One-shard edge layout, packed once — repeated interactive
-        queries must not repay the O(E) host-side partition."""
-        if self._sharded_cache is None:
-            self._sharded_cache = partition(self.coo, 1, 1)
-        return self._sharded_cache
-
-    # -- algorithms --------------------------------------------------------
-    def pagerank(self, alpha=0.85, tol=1e-8, max_iters=100) -> QueryResult:
-        ranks, iters = _pr.pagerank(self.coo, alpha=alpha, tol=tol,
-                                    max_iters=max_iters)
-        return QueryResult(ranks, self.name, int(iters))
-
-    def connected_components(self, max_iters=200) -> QueryResult:
-        labels, iters = _cc.connected_components(self.coo, max_iters=max_iters,
-                                                 sharded=self._sharded)
-        return QueryResult(labels, self.name, int(iters))
-
-    def num_components(self, max_iters=200) -> QueryResult:
-        """Count-only fast path — the '2 seconds vs 10 minutes' query."""
-        labels, iters = _cc.connected_components(self.coo, max_iters=max_iters,
-                                                 sharded=self._sharded)
-        return QueryResult(_cc.num_components(labels), self.name, int(iters))
-
-    def two_hop_pairs(self, n_users: int, dedup=True) -> QueryResult:
-        pairs, valid, count = _th.two_hop_pairs(self.ell, n_users, dedup=dedup)
-        return QueryResult((pairs, valid, int(count)), self.name)
-
-    def two_hop_count(self) -> QueryResult:
-        deg = jnp.sum(self.ell.mask, axis=1)
-        return QueryResult(int(_th.two_hop_count_upper_bound(deg)), self.name)
-
-    def degree_stats(self) -> QueryResult:
-        return QueryResult(_deg.degree_stats(self.coo), self.name)
-
-    def jaccard(self, u, v) -> QueryResult:
-        return QueryResult(_sim.jaccard_similarity(self.ell, u, v), self.name)
-
-    def bfs(self, sources, max_iters=None) -> QueryResult:
-        dist, iters = _tr.bfs_distances(self.coo, sources,
-                                        max_iters=max_iters,
-                                        sharded=self._sharded)
-        return QueryResult(dist, self.name, int(iters))
-
-    def reachable_count(self, sources, max_iters=None) -> QueryResult:
-        """Count-only fast path: |reachable set| without the table."""
-        dist, iters = _tr.bfs_distances(self.coo, sources,
-                                        max_iters=max_iters,
-                                        sharded=self._sharded)
-        return QueryResult(_tr.reachable_count(dist), self.name, int(iters))
-
-    def sssp(self, source, max_iters=None) -> QueryResult:
-        dist, iters = _tr.sssp(self.coo, source, max_iters=max_iters,
-                               sharded=self._sharded)
-        return QueryResult(dist, self.name, int(iters))
-
-    def label_propagation(self, max_iters=30, n_channels=64) -> QueryResult:
-        labels, iters = _cm.label_propagation(
-            self.coo, max_iters=max_iters, n_channels=n_channels,
-            sharded=self._sharded)
-        return QueryResult(labels, self.name, int(iters))
-
-    def num_communities(self, max_iters=30, n_channels=64) -> QueryResult:
-        """Count-only fast path — the paper's '2 s vs 10 min' pattern."""
-        labels, iters = _cm.label_propagation(
-            self.coo, max_iters=max_iters, n_channels=n_channels,
-            sharded=self._sharded)
-        return QueryResult(_cm.num_communities(labels), self.name, int(iters))
-
-    def triangle_count(self) -> QueryResult:
-        count, _ = _tg.triangle_count(self.coo, sharded=self._sharded)
-        return QueryResult(count, self.name, 2)
-
-    def k_core(self, k, max_iters=None) -> QueryResult:
-        members, iters = _tg.k_core(self.coo, k, max_iters=max_iters,
-                                    sharded=self._sharded)
-        return QueryResult(members, self.name, int(iters))
-
-    def k_core_size(self, k, max_iters=None) -> QueryResult:
-        members, iters = _tg.k_core(self.coo, k, max_iters=max_iters,
-                                    sharded=self._sharded)
-        return QueryResult(_tg.core_size(members), self.name, int(iters))
 
 
-class DistributedEngine:
+class DistributedEngine(Engine):
     """Edge-partitioned BSP engine over a device mesh (Spark analogue)."""
 
     name = "distributed"
 
     def __init__(self, coo: G.GraphCOO, mesh=None,
-                 n_data: Optional[int] = None, n_model: int = 1):
-        self.coo = coo
-        self.mesh = mesh
+                 n_data: Optional[int] = None, n_model: int = 1,
+                 max_degree: int = 128):
         if mesh is not None:
             axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            self.n_data = axis_sizes.get("data", 1)
-            self.n_model = axis_sizes.get("model", 1) if n_model > 1 else 1
+            nd = axis_sizes.get("data", 1)
+            nm = axis_sizes.get("model", 1) if n_model > 1 else 1
         else:
-            self.n_data = n_data or 1
-            self.n_model = n_model
-        self.sharded: ShardedCOO = partition(coo, self.n_data, self.n_model)
-        self._pr_cache = None
-
-    def pagerank(self, alpha=0.85, tol=1e-8, max_iters=100) -> QueryResult:
-        if self._pr_cache is None:
-            self._pr_cache = _pr._normalize_and_partition(
-                self.coo, self.n_data, self.n_model)
-        sharded, dangling = self._pr_cache
-        ranks, iters = _pr.pagerank(
-            self.coo, alpha=alpha, tol=tol, max_iters=max_iters,
-            mesh=self.mesh, sharded=sharded, dangling=dangling)
-        return QueryResult(ranks, self.name, int(iters))
-
-    def connected_components(self, max_iters=200) -> QueryResult:
-        labels, iters = _cc.connected_components(
-            self.coo, max_iters=max_iters, mesh=self.mesh,
-            sharded=self.sharded, accelerated=self.n_model == 1)
-        return QueryResult(labels, self.name, int(iters))
-
-    def num_components(self, max_iters=200) -> QueryResult:
-        labels, iters = _cc.connected_components(
-            self.coo, max_iters=max_iters, mesh=self.mesh,
-            sharded=self.sharded, accelerated=self.n_model == 1)
-        return QueryResult(_cc.num_components(labels), self.name, int(iters))
-
-    def two_hop_pairs(self, n_users: int, max_degree: int = 128,
-                      dedup=True) -> QueryResult:
-        # Motif expansion shards trivially over identifier rows; on a mesh
-        # each data shard expands its rows and dedup runs on the gathered
-        # keys (output large => parallel expansion is the win, cf Fig. 5).
-        src = np.asarray(self.coo.src)[: self.coo.n_edges]
-        dst = np.asarray(self.coo.dst)[: self.coo.n_edges]
-        ell = G.build_ell(src, dst, self.coo.n_vertices, max_degree,
-                          direction="in")
-        nbr = jnp.where(ell.mask, ell.nbr, n_users)
-        ell = G.GraphELL(nbr, ell.mask, ell.w, ell.n_vertices,
-                         ell.n_edges, ell.n_edges_total)
-        pairs, valid, count = _th.two_hop_pairs(ell, n_users, dedup=dedup)
-        return QueryResult((pairs, valid, int(count)), self.name)
-
-    def two_hop_count(self, max_degree: int = 128) -> QueryResult:
-        deg = G.in_degrees(self.coo)
-        return QueryResult(int(_th.two_hop_count_upper_bound(deg)), self.name)
-
-    def degree_stats(self) -> QueryResult:
-        return QueryResult(_deg.degree_stats(self.coo), self.name)
-
-    def bfs(self, sources, max_iters=None) -> QueryResult:
-        dist, iters = _tr.bfs_distances(
-            self.coo, sources, max_iters=max_iters, mesh=self.mesh,
-            sharded=self.sharded)
-        return QueryResult(dist, self.name, int(iters))
-
-    def reachable_count(self, sources, max_iters=None) -> QueryResult:
-        dist, iters = _tr.bfs_distances(
-            self.coo, sources, max_iters=max_iters, mesh=self.mesh,
-            sharded=self.sharded)
-        return QueryResult(_tr.reachable_count(dist), self.name, int(iters))
-
-    def sssp(self, source, max_iters=None) -> QueryResult:
-        dist, iters = _tr.sssp(
-            self.coo, source, max_iters=max_iters, mesh=self.mesh,
-            sharded=self.sharded)
-        return QueryResult(dist, self.name, int(iters))
-
-    def label_propagation(self, max_iters=30, n_channels=64) -> QueryResult:
-        labels, iters = _cm.label_propagation(
-            self.coo, max_iters=max_iters, n_channels=n_channels,
-            mesh=self.mesh, sharded=self.sharded)
-        return QueryResult(labels, self.name, int(iters))
-
-    def num_communities(self, max_iters=30, n_channels=64) -> QueryResult:
-        labels, iters = _cm.label_propagation(
-            self.coo, max_iters=max_iters, n_channels=n_channels,
-            mesh=self.mesh, sharded=self.sharded)
-        return QueryResult(_cm.num_communities(labels), self.name, int(iters))
-
-    def triangle_count(self) -> QueryResult:
-        count, _ = _tg.triangle_count(self.coo, mesh=self.mesh,
-                                      sharded=self.sharded)
-        return QueryResult(count, self.name, 2)
-
-    def k_core(self, k, max_iters=None) -> QueryResult:
-        members, iters = _tg.k_core(self.coo, k, max_iters=max_iters,
-                                    mesh=self.mesh, sharded=self.sharded)
-        return QueryResult(members, self.name, int(iters))
-
-    def k_core_size(self, k, max_iters=None) -> QueryResult:
-        members, iters = _tg.k_core(self.coo, k, max_iters=max_iters,
-                                    mesh=self.mesh, sharded=self.sharded)
-        return QueryResult(_tg.core_size(members), self.name, int(iters))
+            nd = n_data or 1
+            nm = n_model
+        super().__init__(coo, mesh=mesh, n_data=nd, n_model=nm,
+                         max_degree=max_degree)

@@ -20,7 +20,8 @@ user in the query plan, like the paper's rule of thumb was.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+
+from repro.core import registry
 
 # TPU v5e-flavored constants (per chip), overridable for calibration.
 HBM_BW = 819e9            # B/s
@@ -118,44 +119,19 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
                 f"distributed wins (scale/output): {td*1e3:.2f} ms vs {tl*1e3:.2f} ms")
 
 
-# Canonical query specs for the library algorithms -------------------------
+# Query specs come from each algorithm's registered cost hook --------------
 
 def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
-             expected_pairs: Optional[int] = None,
-             n_channels: int = 64) -> QuerySpec:
-    if algorithm == "pagerank":
-        return QuerySpec("pagerank", 1 if count_only else g.n_vertices,
-                         iterations=40)
-    if algorithm == "connected_components":
-        return QuerySpec("connected_components",
-                         1 if count_only else g.n_vertices, iterations=16)
-    if algorithm == "two_hop":
-        rows = 1 if count_only else (expected_pairs or
-                                     max(g.n_edges * 4, g.n_vertices))
-        return QuerySpec("two_hop", rows, iterations=1)
-    if algorithm == "degree_stats":
-        return QuerySpec("degree_stats", 1, iterations=1)
-    if algorithm == "bfs":
-        # small-world graphs: effective diameter ~ a dozen supersteps
-        return QuerySpec("bfs", 1 if count_only else g.n_vertices,
-                         iterations=12, state_bytes_per_vertex=4.0)
-    if algorithm == "sssp":
-        # weighted relaxation settles slower than hop distance
-        return QuerySpec("sssp", 1 if count_only else g.n_vertices,
-                         iterations=24, state_bytes_per_vertex=4.0)
-    if algorithm == "label_propagation":
-        # structured messages: 2C channels of 4 bytes vs 12-byte edges
-        return QuerySpec("label_propagation",
-                         1 if count_only else g.n_vertices,
-                         iterations=15, state_bytes_per_vertex=4.0,
-                         edge_bytes_factor=2 * n_channels * 4 / 12)
-    if algorithm == "triangle_count":
-        # two supersteps over neighborhood bitsets of ceil(V/32) words
-        word_bytes = 4.0 * max(g.n_vertices // 32, 1)
-        return QuerySpec("triangle_count", 1, iterations=2,
-                         state_bytes_per_vertex=word_bytes,
-                         edge_bytes_factor=max(2 * word_bytes / 12, 1.0))
-    if algorithm == "k_core":
-        return QuerySpec("k_core", 1 if count_only else g.n_vertices,
-                         iterations=10, state_bytes_per_vertex=4.0)
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+             **params) -> QuerySpec:
+    """Delegate to the algorithm's registered cost hook.
+
+    ``params`` are merged over the schema defaults, so user-supplied
+    caps (``max_iters``) and planner hints (``expected_pairs``,
+    ``n_channels``) flow into the estimate.  Algorithms without a cost
+    hook get a conservative per-vertex-output, one-superstep spec.
+    """
+    defn = registry.get(algorithm)
+    merged = defn.validate(params, partial=True)
+    if defn.cost is None:
+        return QuerySpec(algorithm, 1 if count_only else g.n_vertices)
+    return defn.cost(g, merged, count_only)

@@ -22,7 +22,6 @@ magnitude faster than a dataflow engine that materializes every round.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
 import jax

@@ -8,25 +8,42 @@ owns both engines and routes through the cost-based planner.
     platform = GraphPlatform(coo, mesh=mesh)
     r = platform.query(GraphQuery.connected_components(count_only=True))
     r.value, r.engine, r.meta['plan']
+
+Queries target any algorithm in the registry: the named classmethods are
+thin wrappers over the generic, schema-validated constructor
+
+    GraphQuery.of("hits", max_iters=50)
+
+so a newly registered algorithm is queryable with zero edits here.
+
+``GraphPlatform`` keeps two LRU caches for the paper's interactive query
+class ("<2 s count vs ~10 min table"): a *plan* cache (cost model +
+routing per distinct query shape) and a *result* cache keyed on
+``(graph identity, algorithm, frozen params, count_only, engine)`` —
+a repeated identical query on a resident graph returns the cached result
+without re-tracing or re-running anything.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Optional
 
 from repro.core import graph as G
 from repro.core import planner as P
+from repro.core import registry as R
 from repro.core.engines import LocalEngine, DistributedEngine, QueryResult
 
 
 @dataclasses.dataclass(frozen=True)
 class GraphQuery:
-    """One declarative query; ``algorithm`` is any name ``planner.spec_for``
-    knows: pagerank | connected_components | two_hop | degree_stats |
-    bfs | sssp | label_propagation | triangle_count | k_core.
+    """One declarative query; ``algorithm`` is any registered name
+    (``repro.core.registry.names()``).
 
-    ``count_only=True`` selects the engine's count-only fast path (the
-    paper's '<2 s count vs ~10 min table' query class) where one exists.
+    ``count_only=True`` selects the algorithm's count-only fast path
+    (the paper's '<2 s count vs ~10 min table' query class) where one
+    exists; it is a no-op for algorithms whose result is already a
+    scalar summary.
     """
 
     algorithm: str
@@ -34,59 +51,75 @@ class GraphQuery:
     params: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
+    def of(cls, algorithm: str, count_only: bool = False,
+           **params) -> "GraphQuery":
+        """Generic constructor: validates ``params`` against the
+        algorithm's registered schema (unknown names, missing required
+        parameters and out-of-range values all raise here, not at
+        execution time) and fills in schema defaults."""
+        defn = R.get(algorithm)
+        return cls(algorithm, count_only, defn.validate(params))
+
+    def key(self):
+        """Hashable identity of this query (cache key component)."""
+        return (self.algorithm, R.freeze(self.params), self.count_only)
+
+    # -- named constructors (thin wrappers over ``of``) ---------------------
+    @classmethod
     def pagerank(cls, alpha=0.85, tol=1e-8, max_iters=100):
-        return cls("pagerank", False,
-                   {"alpha": alpha, "tol": tol, "max_iters": max_iters})
+        return cls.of("pagerank", alpha=alpha, tol=tol, max_iters=max_iters)
 
     @classmethod
     def connected_components(cls, count_only=False, max_iters=200):
-        return cls("connected_components", count_only, {"max_iters": max_iters})
+        return cls.of("connected_components", count_only,
+                      max_iters=max_iters)
 
     @classmethod
     def two_hop(cls, n_users: int, count_only=False, dedup=True):
-        return cls("two_hop", count_only, {"n_users": n_users, "dedup": dedup})
+        return cls.of("two_hop", count_only, n_users=n_users, dedup=dedup)
 
     @classmethod
     def degree_stats(cls):
-        return cls("degree_stats", True, {})
+        return cls.of("degree_stats", True)
 
     @classmethod
     def bfs(cls, sources, count_only=False, max_iters=None):
         """Hop distances from a source set; ``count_only`` returns the
         size of the reachable set instead of the distance table.
         ``max_iters=None`` guarantees convergence."""
-        return cls("bfs", count_only,
-                   {"sources": tuple(sources), "max_iters": max_iters})
+        return cls.of("bfs", count_only, sources=tuple(sources),
+                      max_iters=max_iters)
 
     @classmethod
     def sssp(cls, source: int, max_iters=None):
         """Single-source weighted shortest paths (non-negative weights)."""
-        return cls("sssp", False, {"source": source, "max_iters": max_iters})
+        return cls.of("sssp", source=source, max_iters=max_iters)
 
     @classmethod
     def label_propagation(cls, count_only=False, max_iters=30,
                           n_channels=64):
         """Community detection; ``count_only`` returns ``num_communities``."""
-        return cls("label_propagation", count_only,
-                   {"max_iters": max_iters, "n_channels": n_channels})
+        return cls.of("label_propagation", count_only, max_iters=max_iters,
+                      n_channels=n_channels)
 
     @classmethod
     def triangle_count(cls):
         """Global triangle count (inherently count-only)."""
-        return cls("triangle_count", True, {})
+        return cls.of("triangle_count", True)
 
     @classmethod
     def k_core(cls, k: int, count_only=False, max_iters=None):
         """k-core membership; ``count_only`` returns the core size."""
-        return cls("k_core", count_only, {"k": k, "max_iters": max_iters})
+        return cls.of("k_core", count_only, k=k, max_iters=max_iters)
 
 
 class GraphPlatform:
-    """Owns both engines; routes each query through the planner."""
+    """Owns both engines; routes each query through the planner and
+    serves repeats from the result cache."""
 
     def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
                  n_model: int = 1, local_max_degree: int = 128,
-                 force_engine: Optional[str] = None):
+                 force_engine: Optional[str] = None, cache_size: int = 128):
         self.coo = coo
         self.mesh = mesh
         self.stats = P.GraphStats.of(coo)
@@ -96,12 +129,15 @@ class GraphPlatform:
         self._local_max_degree = local_max_degree
         self._n_data, self._n_model = n_data, n_model
         if mesh is not None:
-            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
             self.n_chips = 1
             for s in mesh.devices.shape:
                 self.n_chips *= s
         else:
             self.n_chips = max(n_data * n_model, 1)
+        self.cache_size = cache_size
+        self._plan_cache: OrderedDict = OrderedDict()
+        self._result_cache: OrderedDict = OrderedDict()
+        self.cache_stats = {"hits": 0, "misses": 0}
 
     # lazy engine construction: building ELL/partitions is ETL work we
     # only pay when the planner actually routes there.
@@ -119,51 +155,62 @@ class GraphPlatform:
                                            n_model=self._n_model)
         return self._dist
 
+    @staticmethod
+    def _lru_get(cache: OrderedDict, key):
+        if key is None or key not in cache:
+            return None
+        cache.move_to_end(key)
+        return cache[key]
+
+    def _lru_put(self, cache: OrderedDict, key, value) -> None:
+        if key is None or not self.cache_size:
+            return
+        cache[key] = value
+        while len(cache) > self.cache_size:
+            cache.popitem(last=False)
+
+    @staticmethod
+    def _query_key(q: GraphQuery):
+        try:
+            key = q.key()
+            hash(key)           # force the check: freeze() may pass
+            return key          # exotic values through unhashed
+        except TypeError:       # unhashable parameter value: skip caching
+            return None
+
     def plan(self, q: GraphQuery) -> P.Plan:
+        """Cost both engines and pick one (cached per query shape)."""
+        key = self._query_key(q)
+        cached = self._lru_get(self._plan_cache, key)
+        if cached is not None:
+            return cached
+        defn = R.get(q.algorithm)
         spec = P.spec_for(q.algorithm, self.stats, count_only=q.count_only,
-                          n_channels=q.params.get("n_channels", 64))
+                          **q.params)
         plan = P.choose_engine(self.stats, spec, self.n_chips)
         if self.force_engine:
             plan = dataclasses.replace(plan, engine=self.force_engine,
                                        reason=f"forced: {self.force_engine}")
+        if plan.engine not in defn.engines:
+            # capability clamp wins over both the cost model and forcing
+            plan = dataclasses.replace(
+                plan, engine=defn.engines[0],
+                reason=f"{q.algorithm} runs on {'/'.join(defn.engines)} "
+                       f"only")
+        self._lru_put(self._plan_cache, key, plan)
         return plan
 
     def query(self, q: GraphQuery) -> QueryResult:
         plan = self.plan(q)
+        qkey = self._query_key(q)
+        key = None if qkey is None else (id(self.coo), plan.engine) + qkey
+        hit = self._lru_get(self._result_cache, key)
+        if hit is not None:
+            self.cache_stats["hits"] += 1
+            return dataclasses.replace(hit, meta={**hit.meta, "cache": "hit"})
+        self.cache_stats["misses"] += 1
         eng = self.local if plan.engine == "local" else self.distributed
-        if q.algorithm == "pagerank":
-            r = eng.pagerank(**q.params)
-        elif q.algorithm == "connected_components":
-            r = (eng.num_components(**q.params) if q.count_only
-                 else eng.connected_components(**q.params))
-        elif q.algorithm == "two_hop":
-            if q.count_only:
-                r = eng.two_hop_count()
-            else:
-                r = eng.two_hop_pairs(q.params["n_users"],
-                                      dedup=q.params.get("dedup", True))
-        elif q.algorithm == "degree_stats":
-            r = eng.degree_stats()
-        elif q.algorithm == "bfs":
-            sources = list(q.params["sources"])
-            max_iters = q.params.get("max_iters")
-            r = (eng.reachable_count(sources, max_iters=max_iters)
-                 if q.count_only else eng.bfs(sources, max_iters=max_iters))
-        elif q.algorithm == "sssp":
-            r = eng.sssp(q.params["source"],
-                         max_iters=q.params.get("max_iters"))
-        elif q.algorithm == "label_propagation":
-            kw = {"max_iters": q.params.get("max_iters", 30),
-                  "n_channels": q.params.get("n_channels", 64)}
-            r = (eng.num_communities(**kw) if q.count_only
-                 else eng.label_propagation(**kw))
-        elif q.algorithm == "triangle_count":
-            r = eng.triangle_count()
-        elif q.algorithm == "k_core":
-            kw = {"max_iters": q.params.get("max_iters")}
-            r = (eng.k_core_size(q.params["k"], **kw) if q.count_only
-                 else eng.k_core(q.params["k"], **kw))
-        else:
-            raise ValueError(q.algorithm)
+        r = eng.run(q.algorithm, q.params, count_only=q.count_only)
         r.meta["plan"] = plan
+        self._lru_put(self._result_cache, key, r)
         return r

@@ -1,0 +1,263 @@
+"""Algorithm registry — the platform's single extension point.
+
+The paper's platform (Section III-A) puts one unified interface above
+heterogeneous engines so adding a use case does not mean re-plumbing
+every layer.  This module is that property made concrete: an algorithm
+is *data* — an ``AlgorithmDef`` carrying its parameter schema, its
+runner, its count-only fast path, its planner cost hook and its engine
+capability flags — and every layer (engines, planner, query, benchmarks,
+tests) iterates the registry instead of hard-coding names.
+
+Registering a new workload means creating one module under
+``repro/core/algorithms/`` that calls :func:`register` at import time.
+Nothing else changes: ``ensure_loaded`` auto-discovers every module in
+the package, so the engines, the planner and ``GraphQuery`` pick the new
+algorithm up without edits (see ``algorithms/hits.py`` for the
+canonical example).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import pkgutil
+from typing import Any, Callable, Mapping, Optional
+
+import numpy as np
+
+
+class _Required:
+    """Sentinel for parameters without a default."""
+
+    def __repr__(self) -> str:  # pragma: no cover - repr cosmetics
+        return "<required>"
+
+
+REQUIRED = _Required()
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One entry of an algorithm's parameter schema.
+
+    ``default=REQUIRED`` marks a mandatory parameter.  ``normalize`` maps
+    user input to the canonical (hashable) form — e.g. a source list to
+    a tuple of ints — so validated params can key the platform's result
+    cache.  ``check`` receives the normalized value and returns whether
+    it is admissible.  Both are skipped for ``None`` values (``None``
+    uniformly means "auto" in this codebase).
+    """
+
+    name: str
+    default: Any = REQUIRED
+    check: Optional[Callable[[Any], bool]] = None
+    normalize: Optional[Callable[[Any], Any]] = None
+    doc: str = ""
+
+    @property
+    def required(self) -> bool:
+        return self.default is REQUIRED
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmDef:
+    """Everything the platform needs to serve one algorithm.
+
+    run     : the full-result runner.  Either a callable
+              ``(engine, **params) -> (value, iterations_or_None)`` or a
+              ``PregelSpec`` — in the latter case ``init`` must map
+              ``(engine, params) -> (init_state, max_iters)`` and the
+              engine drives ``run_pregel`` generically.
+    count   : optional reducer ``value -> count`` for ``count_only``
+              queries that post-process the full result (e.g.
+              ``num_components``).
+    count_run: optional *dedicated* count-only runner for algorithms
+              whose fast path never materializes the full result at all
+              (two-hop's degree-sum bound — the paper's '<2 s count vs
+              ~10 min table' class).  Takes the same signature as a
+              callable ``run`` and may ignore parameters.
+    cost    : planner hook ``(GraphStats, params, count_only) ->
+              QuerySpec``; receives schema defaults merged under any
+              user-supplied params, so user caps like ``max_iters`` flow
+              into the cost model.
+    engines : capability flags; which engines can execute the
+              definition (``("local",)`` for ELL-batch workloads that
+              are inherently single-device).
+    requires_symmetric : undirected semantics — the engine rejects
+              non-symmetrized edge lists up front.
+    method / count_method : engine method aliases (``eng.k_core(...)``,
+              ``eng.k_core_size(...)``); ``method`` defaults to ``name``.
+    example_params : a representative parameter set (satisfying the
+              schema) used by the generic benchmark sweep and the parity
+              test suite; ``None`` opts out of generic sweeps.
+    """
+
+    name: str
+    run: Any
+    params: tuple[Param, ...] = ()
+    init: Optional[Callable[[Any, dict], tuple]] = None
+    count: Optional[Callable[[Any], Any]] = None
+    count_run: Optional[Callable[..., tuple]] = None
+    cost: Optional[Callable[..., Any]] = None
+    engines: tuple[str, ...] = ("local", "distributed")
+    requires_symmetric: bool = False
+    method: Optional[str] = None
+    count_method: Optional[str] = None
+    example_params: Optional[Mapping[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    doc: str = ""
+
+    @property
+    def has_count_path(self) -> bool:
+        return self.count is not None or self.count_run is not None
+
+    def defaults(self) -> dict:
+        """Schema defaults (required parameters omitted)."""
+        return {p.name: p.default for p in self.params if not p.required}
+
+    def validate(self, params: Optional[Mapping[str, Any]] = None,
+                 partial: bool = False) -> dict:
+        """Check ``params`` against the schema; returns the normalized
+        dict with defaults filled in.
+
+        ``partial=True`` tolerates missing required parameters (the
+        planner costs queries it cannot yet run — e.g. a spec sweep).
+        Unknown parameter names are always an error.
+        """
+        params = dict(params or {})
+        known = {p.name for p in self.params}
+        unknown = sorted(set(params) - known)
+        if unknown:
+            raise ValueError(
+                f"{self.name}: unknown parameter(s) {unknown}; "
+                f"schema: {sorted(known)}")
+        out = {}
+        for p in self.params:
+            if p.name in params:
+                v = params[p.name]
+            elif p.required:
+                if partial:
+                    continue
+                raise ValueError(
+                    f"{self.name}: missing required parameter {p.name!r}")
+            else:
+                v = p.default
+            if v is not None:
+                if p.normalize is not None:
+                    v = p.normalize(v)
+                if p.check is not None and not p.check(v):
+                    raise ValueError(
+                        f"{self.name}: invalid value {v!r} for "
+                        f"parameter {p.name!r}")
+            out[p.name] = v
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The registry proper
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, AlgorithmDef] = {}
+_METHOD_TABLE: Optional[dict] = None
+_LOADED = False
+_LOADING = False
+
+_ALGORITHMS_PKG = "repro.core.algorithms"
+
+
+def register(defn: AlgorithmDef, replace: bool = False) -> AlgorithmDef:
+    """Add a definition; modules call this at import time."""
+    global _METHOD_TABLE
+    if not replace and defn.name in _REGISTRY \
+            and _REGISTRY[defn.name] is not defn:
+        raise ValueError(f"algorithm {defn.name!r} is already registered")
+    _REGISTRY[defn.name] = defn
+    _METHOD_TABLE = None
+    return defn
+
+
+def unregister(name: str) -> None:
+    """Remove a definition (tests registering throwaway algorithms)."""
+    global _METHOD_TABLE
+    _REGISTRY.pop(name, None)
+    _METHOD_TABLE = None
+
+
+def ensure_loaded() -> None:
+    """Import every module under ``repro.core.algorithms`` so their
+    ``register`` calls have run.  Auto-discovery is what makes adding an
+    algorithm a one-file change: a new module in the package is found
+    here without touching any dispatch table.
+
+    Marked loaded only once every import succeeded — a failing module
+    (e.g. a broken user algorithm) raises on *every* call rather than
+    leaving a silently half-populated registry."""
+    global _LOADED, _LOADING
+    if _LOADED or _LOADING:      # _LOADING: reentrant import of this pkg
+        return
+    _LOADING = True
+    try:
+        pkg = importlib.import_module(_ALGORITHMS_PKG)
+        for mod in pkgutil.iter_modules(pkg.__path__):
+            importlib.import_module(f"{_ALGORITHMS_PKG}.{mod.name}")
+        _LOADED = True
+    finally:
+        _LOADING = False
+
+
+def get(name: str) -> AlgorithmDef:
+    ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {names()}") from None
+
+
+def names() -> list[str]:
+    ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def items() -> list[tuple[str, AlgorithmDef]]:
+    ensure_loaded()
+    return sorted(_REGISTRY.items())
+
+
+def method_table() -> dict[str, tuple[AlgorithmDef, bool]]:
+    """Engine method name -> (definition, count_only) — the table behind
+    ``Engine.__getattr__`` dispatch (``eng.num_components()`` ==
+    ``eng.run("connected_components", count_only=True)``).  Memoized;
+    ``register``/``unregister`` invalidate."""
+    global _METHOD_TABLE
+    ensure_loaded()
+    if _METHOD_TABLE is None:
+        table: dict[str, tuple[AlgorithmDef, bool]] = {}
+        for defn in _REGISTRY.values():
+            table[defn.method or defn.name] = (defn, False)
+            if defn.count_method:
+                table[defn.count_method] = (defn, True)
+        _METHOD_TABLE = table
+    return _METHOD_TABLE
+
+
+# ---------------------------------------------------------------------------
+# Cache keys
+# ---------------------------------------------------------------------------
+
+def freeze(value: Any) -> Any:
+    """Recursively convert a parameter value into a hashable key
+    component (dicts to sorted item tuples, arrays to bytes)."""
+    if isinstance(value, Mapping):
+        return tuple(sorted((k, freeze(v)) for k, v in value.items()))
+    if isinstance(value, (list, tuple)):
+        return tuple(freeze(v) for v in value)
+    if isinstance(value, (set, frozenset)):
+        return tuple(sorted(freeze(v) for v in value))
+    if isinstance(value, np.ndarray):
+        return (value.dtype.str, value.shape, value.tobytes())
+    if isinstance(value, (int, float, bool, str, bytes, type(None))):
+        return value
+    if hasattr(value, "__array__"):          # jax arrays and friends
+        arr = np.asarray(value)
+        return (arr.dtype.str, arr.shape, arr.tobytes())
+    return value                              # trust it to be hashable

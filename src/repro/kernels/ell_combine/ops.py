@@ -6,7 +6,6 @@ reference under the same signature so engines can flip implementations.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

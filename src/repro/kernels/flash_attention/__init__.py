@@ -1,1 +1,2 @@
-from repro.kernels.flash_attention.ops import flash_attention, mha_reference
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_reference

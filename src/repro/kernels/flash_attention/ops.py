@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ref import mha_reference
 
 
 def _on_cpu() -> bool:

@@ -32,11 +32,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import (
     SHAPES, get_config, list_archs, shape_applicable, reduced_config)
 from repro.models.registry import build_model
-from repro.models.transformer import dp_axes
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, n_chips
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import (
-    make_train_step, init_train_state, state_spec, TrainState)
+    make_train_step, init_train_state, state_spec)
 from repro.utils import roofline as RL
 from repro.utils.tree import flatten_with_paths
 

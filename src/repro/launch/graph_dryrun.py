@@ -11,13 +11,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 #   PYTHONPATH=src python -m repro.launch.graph_dryrun [--mesh single|multi]
 
 import argparse
-import dataclasses
 import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax import lax
 

@@ -14,7 +14,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ShapeSpec
 from repro.models import layers as L
 from repro.models.transformer import DenseLM, dp_axes
 

@@ -16,12 +16,10 @@ standard production-JAX pattern for compile time and activation memory.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.transformer import DenseLM, dp_axes
 

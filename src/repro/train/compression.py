@@ -16,7 +16,6 @@ the wire format, which is what tests/test_compression.py verifies
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

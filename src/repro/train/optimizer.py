@@ -7,7 +7,6 @@ rules apply to ``m``/``v`` verbatim — sharding the optimizer over the
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

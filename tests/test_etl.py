@@ -95,7 +95,8 @@ def test_similarity():
     src = np.array([0, 0, 1, 1, 2, 2, 2, 3])
     dst = np.array([1, 2, 0, 2, 0, 1, 3, 2])
     ell = G.build_ell(src, dst, 4, max_degree=4, direction="out")
-    u = jnp.array([0]); v = jnp.array([1])
+    u = jnp.array([0])
+    v = jnp.array([1])
     assert int(common_neighbors(ell, u, v)[0]) == 1     # {2}
     jac = float(jaccard_similarity(ell, u, v)[0])
     assert jac == pytest.approx(1 / 3)                   # |{2}| / |{0,1,2}|

@@ -2,7 +2,6 @@
 swept over shapes and dtypes.  Hypothesis property tests live in
 ``test_kernels_properties.py`` (skipped when ``hypothesis`` is absent).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -112,12 +112,37 @@ def test_triangle_bitset_state_crosses_before_scalar_programs():
     assert crossover("triangle_count") < crossover("connected_components")
 
 
+def test_user_max_iters_flows_into_cost():
+    """Satellite fix: a user-supplied ``max_iters`` cap reaches the cost
+    hook — the planner must not cost a 4-superstep CC at the analytic
+    16 (nor a 3-hop BFS at 12)."""
+    g = _stats(1_000_000, 5_000_000)
+    assert P.spec_for("connected_components", g).iterations == 16
+    assert P.spec_for("connected_components", g, max_iters=4).iterations == 4
+    assert P.spec_for("bfs", g).iterations == 12
+    assert P.spec_for("bfs", g, max_iters=3).iterations == 3
+    assert P.spec_for("pagerank", g, max_iters=10).iterations == 10
+    # caps looser than the analytic estimate keep the estimate
+    assert P.spec_for("pagerank", g, max_iters=500).iterations == 40
+    # and a tighter cap lowers the estimated cost monotonically
+    tight = P.estimate_local_cost(g, P.spec_for("pagerank", g, max_iters=5))
+    loose = P.estimate_local_cost(g, P.spec_for("pagerank", g))
+    assert tight < loose
+
+
+def test_spec_for_rejects_unknown_params():
+    g = _stats(1_000, 5_000)
+    with pytest.raises(ValueError, match="unknown parameter"):
+        P.spec_for("pagerank", g, iters=10)
+
+
 def test_platform_plan_for_new_queries():
     """GraphQuery -> Plan through the platform without running engines."""
     from repro.core import graph as G
     from repro.core.query import GraphPlatform, GraphQuery
     import numpy as np
-    src = np.array([0, 1, 2]); dst = np.array([1, 2, 0])
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 0])
     plat = GraphPlatform(G.build_coo(src, dst, 3, symmetrize=True))
     for q in [GraphQuery.bfs([0]), GraphQuery.sssp(0),
               GraphQuery.label_propagation(), GraphQuery.triangle_count(),

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
-from repro.core.partition import partition, partition_1d, partition_2d
+from repro.core.partition import partition_1d, partition_2d
 from repro.core.pregel import PregelSpec, run_pregel
 from repro.data import synthetic as S
 

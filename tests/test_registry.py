@@ -1,0 +1,365 @@
+"""Registry-driven platform tests.
+
+Three guarantees the registry refactor must hold:
+
+1. **Parity** — every registered algorithm produces identical results on
+   ``LocalEngine`` and ``DistributedEngine`` (both now share the one
+   generic ``Engine.run`` path), and matches its host-side oracle where
+   one exists.  The suite iterates the registry, so a newly registered
+   algorithm is covered automatically — and *must* declare
+   ``example_params`` (or an override here) or the coverage test fails.
+2. **Caching** — a repeated identical ``GraphQuery`` on the same
+   ``GraphPlatform`` is served from the result cache without re-running
+   the engine; differing params / count_only / engine miss.
+3. **Registration is the only extension point** — a throwaway algorithm
+   registered at runtime is immediately plannable, queryable and
+   cacheable through ``GraphPlatform`` with zero edits to the
+   engine/planner/query layers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
+from repro.core.engines import DistributedEngine, LocalEngine
+from repro.core.query import GraphPlatform, GraphQuery
+from repro.data import synthetic as S
+
+N = 300
+
+# Per-algorithm parameter overrides for the parity sweep; algorithms not
+# listed here run with their registered ``example_params``.
+PARAM_OVERRIDES = {
+    "two_hop": {"dedup": True},
+    "pagerank": {"tol": 1e-10},
+}
+
+
+def _edges(g):
+    return (np.asarray(g.src)[: g.n_edges], np.asarray(g.dst)[: g.n_edges],
+            np.asarray(g.w)[: g.n_edges])
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    src, dst = S.user_follow_graph(N, 4.0, seed=13)
+    keep = src != dst
+    return {False: G.build_coo(src, dst, N),
+            True: G.build_coo(src[keep], dst[keep], N, symmetrize=True)}
+
+
+@pytest.fixture(scope="module")
+def engines(graphs):
+    # max_degree above the true max in-degree so ELL-based algorithms
+    # (two_hop, jaccard) see the uncapped adjacency
+    built = {}
+    for sym, g in graphs.items():
+        _, d, _ = _edges(g)
+        maxdeg = int(np.bincount(d, minlength=N).max())
+        built[sym] = (LocalEngine(g, max_degree=maxdeg),
+                      DistributedEngine(g, n_data=4, max_degree=maxdeg))
+    return built
+
+
+def _case_params(defn):
+    if defn.name in PARAM_OVERRIDES:
+        return {**(defn.example_params or {}), **PARAM_OVERRIDES[defn.name]}
+    return dict(defn.example_params)
+
+
+def _assert_same(a, b, ctx=""):
+    if isinstance(a, dict):
+        assert sorted(a) == sorted(b), ctx
+        for k in a:
+            _assert_same(a[k], b[k], f"{ctx}[{k}]")
+        return
+    if isinstance(a, tuple):
+        assert isinstance(b, tuple) and len(a) == len(b), ctx
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_same(x, y, f"{ctx}[{i}]")
+        return
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, ctx
+    if np.issubdtype(a.dtype, np.floating):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7, err_msg=ctx)
+    else:
+        np.testing.assert_array_equal(a, b, err_msg=ctx)
+
+
+def test_every_registration_declares_parity_params():
+    """A new algorithm must ship representative parameters (or a
+    PARAM_OVERRIDES entry above) so the parity sweep exercises it."""
+    for name, defn in R.items():
+        assert defn.example_params is not None or name in PARAM_OVERRIDES, \
+            f"{name}: no example_params and no parity override"
+
+
+@pytest.mark.parametrize("name", R.names())
+def test_engine_parity(name, engines):
+    """The acceptance bar: every registered algorithm, identical results
+    through the shared Engine.run path on both engines, including the
+    count-only fast path where one exists."""
+    defn = R.get(name)
+    params = _case_params(defn)
+    local, dist = engines[defn.requires_symmetric]
+    r_local = local.run(defn, params)
+    assert r_local.engine == "local"
+    if "distributed" in defn.engines:
+        r_dist = dist.run(defn, params)
+        assert r_dist.engine == "distributed"
+        _assert_same(r_local.value, r_dist.value, f"{name} full result")
+    if defn.has_count_path:
+        c_local = local.run(defn, params, count_only=True)
+        assert np.asarray(c_local.value).size == 1, name
+        if "distributed" in defn.engines:
+            c_dist = dist.run(defn, params, count_only=True)
+            _assert_same(c_local.value, c_dist.value, f"{name} count")
+
+
+# ------------------------------------------------------------- oracles
+
+def test_parity_oracles(graphs, engines):
+    """Registered runs vs the host-side numpy oracles."""
+    from repro.core.algorithms.connected_components import (
+        connected_components_reference)
+    from repro.core.algorithms.pagerank import pagerank_reference
+    from repro.core.algorithms.traversal import bfs_reference, sssp_reference
+    from repro.core.algorithms.triangles import (
+        k_core_reference, triangle_count_reference)
+    from repro.core.algorithms.two_hop import two_hop_reference
+
+    dig, sym = graphs[False], graphs[True]
+    s, d, w = _edges(dig)
+    ss, sd, _ = _edges(sym)
+    lod, los = engines[False][0], engines[True][0]
+
+    ref, _ = pagerank_reference(s, d, N, tol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(lod.run("pagerank", {"tol": 1e-10}).value), ref,
+        atol=1e-6)
+
+    np.testing.assert_array_equal(
+        np.asarray(los.run("connected_components").value),
+        connected_components_reference(ss, sd, N))
+
+    np.testing.assert_array_equal(
+        np.asarray(lod.run("bfs", {"sources": (0,)}).value),
+        bfs_reference(s, d, N, [0]))
+
+    np.testing.assert_allclose(
+        np.asarray(lod.run("sssp", {"source": 0}).value),
+        sssp_reference(s, d, w, N, 0), atol=1e-5)
+
+    assert los.run("triangle_count").value == \
+        triangle_count_reference(ss, sd, N)
+
+    np.testing.assert_array_equal(
+        np.asarray(los.run("k_core", {"k": 3}).value),
+        k_core_reference(ss, sd, N, 3))
+
+    # two-hop: distinct pairs sharing an in-neighbor ("identifier" = dst)
+    pairs, valid, count = lod.run("two_hop").value
+    got = {(int(p[0]), int(p[1]))
+           for p, ok in zip(np.asarray(pairs), np.asarray(valid)) if ok}
+    ref_pairs = two_hop_reference(s, d, N)
+    assert got == ref_pairs and count == len(ref_pairs)
+
+    # jaccard oracle via python sets over in-neighborhoods
+    u, v = 0, 1
+    nbrs = [set() for _ in range(N)]
+    for a, b in zip(s, d):
+        nbrs[int(b)].add(int(a))
+    inter = len(nbrs[u] & nbrs[v])
+    union = len(nbrs[u] | nbrs[v])
+    want = inter / union if union else 0.0
+    got_j = float(np.asarray(lod.run("jaccard", {"u": [u], "v": [v]}).value)[0])
+    assert got_j == pytest.approx(want)
+
+
+def test_two_hop_count_consistent_across_engines_and_exact(graphs):
+    """Satellite fix: both engines answer the count-only two-hop query
+    from *exact* COO in-degrees — a degree-capped local ELL must not
+    change the answer."""
+    dig = graphs[False]
+    s, d, _ = _edges(dig)
+    deg = np.bincount(d, minlength=N).astype(np.int64)
+    want = int((deg * (deg - 1) // 2).sum())
+    # a small cap would previously make the local engine undercount
+    lo = LocalEngine(dig, max_degree=2)
+    di = DistributedEngine(dig, n_data=4, max_degree=2)
+    assert lo.two_hop_count().value == want
+    assert di.two_hop_count().value == want
+
+
+def test_distributed_two_hop_ell_cached(graphs):
+    """Satellite fix: the distributed engine's ELL is built once and
+    reused across two-hop calls (it used to rebuild per call)."""
+    eng = DistributedEngine(graphs[False], n_data=4)
+    first = eng.run("two_hop").value
+    assert eng._ell is not None
+    ell = eng._ell
+    eng.run("two_hop")
+    assert eng._ell is ell
+
+
+# ------------------------------------------------------ schema validation
+
+def test_unknown_algorithm_rejected():
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        GraphQuery.of("page_rank")
+
+
+def test_unknown_param_rejected():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        GraphQuery.of("pagerank", aplha=0.9)
+
+
+def test_missing_required_param_rejected():
+    with pytest.raises(ValueError, match="missing required"):
+        GraphQuery.of("bfs")
+
+
+def test_invalid_value_rejected():
+    with pytest.raises(ValueError, match="invalid value"):
+        GraphQuery.of("pagerank", alpha=1.5)
+    with pytest.raises(ValueError, match="invalid value"):
+        GraphQuery.of("k_core", k=0)
+
+
+def test_defaults_filled_and_normalized():
+    q = GraphQuery.of("pagerank")
+    assert q.params == {"alpha": 0.85, "tol": 1e-8, "max_iters": 100}
+    q = GraphQuery.of("bfs", sources=[3, 1])
+    assert q.params["sources"] == (3, 1)       # normalized to tuple
+
+
+def test_engine_capability_flags(graphs):
+    """jaccard is registered local-only: the distributed engine rejects
+    it and the platform clamps the plan to the local engine even when
+    forcing distributed."""
+    defn = R.get("jaccard")
+    assert defn.engines == ("local",)
+    with pytest.raises(ValueError, match="supports engine"):
+        DistributedEngine(graphs[False], n_data=4).run(
+            "jaccard", {"u": [0], "v": [1]})
+    plat = GraphPlatform(graphs[False], force_engine="distributed")
+    r = plat.query(GraphQuery.of("jaccard", u=[0], v=[1]))
+    assert r.engine == "local"
+    assert "local" in r.meta["plan"].reason
+
+
+# ---------------------------------------------------------- result cache
+
+@pytest.fixture()
+def platform(graphs):
+    return GraphPlatform(graphs[True], n_data=4)
+
+
+def test_repeated_query_served_from_cache(platform):
+    q1 = GraphQuery.connected_components(count_only=True)
+    r1 = platform.query(q1)
+    runs = platform.local.n_runs + (
+        platform._dist.n_runs if platform._dist else 0)
+    # a *fresh* but identical query object must hit
+    r2 = platform.query(GraphQuery.connected_components(count_only=True))
+    assert r2.value == r1.value
+    assert r2.meta.get("cache") == "hit"
+    assert "cache" not in r1.meta               # stored copy untouched
+    assert platform.local.n_runs + (
+        platform._dist.n_runs if platform._dist else 0) == runs
+    assert platform.cache_stats == {"hits": 1, "misses": 1}
+
+
+def test_differing_params_miss(platform):
+    platform.query(GraphQuery.connected_components(count_only=True))
+    platform.query(GraphQuery.connected_components(count_only=True,
+                                                   max_iters=199))
+    platform.query(GraphQuery.connected_components(count_only=False))
+    assert platform.cache_stats["hits"] == 0
+    assert platform.cache_stats["misses"] == 3
+
+
+def test_cache_respects_force_engine(graphs):
+    """Same query, different engine -> different cache entries."""
+    auto = GraphPlatform(graphs[True], n_data=4)
+    forced = GraphPlatform(graphs[True], n_data=4,
+                           force_engine="distributed")
+    q = GraphQuery.connected_components(count_only=True)
+    assert auto.query(q).engine == "local"
+    assert forced.query(q).engine == "distributed"
+    assert auto.query(q).value == forced.query(q).value
+
+
+def test_cache_lru_eviction(graphs):
+    plat = GraphPlatform(graphs[True], cache_size=1)
+    q_a = GraphQuery.connected_components(count_only=True)
+    q_b = GraphQuery.degree_stats()
+    plat.query(q_a)
+    plat.query(q_b)                  # evicts q_a
+    plat.query(q_a)                  # miss again
+    assert plat.cache_stats == {"hits": 0, "misses": 3}
+    plat.query(q_a)
+    assert plat.cache_stats["hits"] == 1
+
+
+def test_cache_disabled(graphs):
+    plat = GraphPlatform(graphs[True], cache_size=0)
+    q = GraphQuery.connected_components(count_only=True)
+    plat.query(q)
+    r = plat.query(q)
+    assert r.meta.get("cache") is None
+    assert plat.cache_stats == {"hits": 0, "misses": 2}
+
+
+def test_plan_cache_returns_same_plan(platform):
+    q = GraphQuery.pagerank()
+    p1 = platform.plan(q)
+    p2 = platform.plan(GraphQuery.pagerank())
+    assert p1 is p2
+
+
+# ------------------------------------------- registration as extension
+
+def test_register_new_algorithm_end_to_end(graphs):
+    """The tentpole property: a new algorithm registered at runtime is
+    immediately plannable, runnable on both engines, queryable through
+    GraphPlatform and result-cached — with zero edits to the
+    engines/planner/query layers."""
+    name = "scaled_in_degree_test"
+
+    def _run(eng, scale):
+        return G.in_degrees(eng.coo) * scale, 1
+
+    R.register(R.AlgorithmDef(
+        name=name,
+        run=_run,
+        params=(R.Param("scale", 1.0, check=lambda s: s > 0,
+                        normalize=float),),
+        count=lambda v: float(np.asarray(v).max()),
+        count_method="max_scaled_in_degree_test",
+        cost=lambda g, params, count_only: P.QuerySpec(
+            name, 1 if count_only else g.n_vertices, iterations=1),
+    ))
+    try:
+        plat = GraphPlatform(graphs[False], n_data=4)
+        q = GraphQuery.of(name, scale=2.0)
+        plan = plat.plan(q)
+        assert plan.engine in ("local", "distributed")
+        r = plat.query(q)
+        s, d, _ = _edges(graphs[False])
+        np.testing.assert_allclose(
+            np.asarray(r.value), 2.0 * np.bincount(d, minlength=N))
+        assert plat.query(GraphQuery.of(name, scale=2.0)).meta["cache"] == \
+            "hit"
+        # engine parity + the derived count method, via dynamic dispatch
+        lo = LocalEngine(graphs[False])
+        di = DistributedEngine(graphs[False], n_data=4)
+        np.testing.assert_allclose(np.asarray(lo.run(name, {"scale": 2.0}).value),
+                                   np.asarray(di.run(name, {"scale": 2.0}).value))
+        assert lo.max_scaled_in_degree_test(scale=2.0).value == \
+            float(np.asarray(r.value).max())
+    finally:
+        R.unregister(name)
+    with pytest.raises(KeyError):
+        R.get(name)

@@ -8,7 +8,7 @@ from repro.core import graph as G
 from repro.core.query import GraphQuery, GraphPlatform
 from repro.core.algorithms.two_hop import two_hop_reference
 from repro.core.algorithms.connected_components import (
-    connected_components_reference, num_components)
+    connected_components_reference)
 from repro.core.algorithms.legacy import (
     legacy_multi_account, legacy_connected_users)
 from repro.data import synthetic as S

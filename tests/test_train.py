@@ -1,7 +1,6 @@
 """Training-substrate tests: optimizer behaviour, microbatch equivalence,
 gradient compression, checkpoint/restore, data pipeline determinism.
 """
-import os
 
 import jax
 import jax.numpy as jnp
@@ -10,9 +9,9 @@ import pytest
 
 from repro.configs.base import get_config, reduced_config
 from repro.models.registry import build_model
-from repro.train.optimizer import AdamWConfig, lr_at, init_opt_state
+from repro.train.optimizer import AdamWConfig, lr_at
 from repro.train.train_step import (
-    make_train_step, init_train_state, state_spec)
+    make_train_step, init_train_state)
 from repro.train.compression import CompressionConfig, compress_grads, \
     init_error_state
 from repro.train.checkpoint import (
