@@ -1,0 +1,129 @@
+"""HITS: the registry's one-file-extension example.
+
+Checks the algorithm itself (oracle + known graphs) and the extension
+contract: the definition reached the planner, both engines and the
+query layer purely through registration (this module's sibling,
+``algorithms/hits.py``, touches none of them).
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
+from repro.core.algorithms.hits import hits, hits_reference, role_graph
+from repro.core.engines import DistributedEngine, LocalEngine
+from repro.core.query import GraphPlatform, GraphQuery
+from repro.data import synthetic as S
+
+
+def _graph(n=250, seed=3):
+    src, dst = S.user_follow_graph(n, 4.0, seed=seed)
+    return G.build_coo(src, dst, n), src, dst
+
+
+def test_hits_matches_numpy_oracle():
+    g, src, dst = _graph()
+    got, _ = hits(g)
+    want, _ = hits_reference(src, dst, g.n_vertices)
+    # same schedule, float32 device vs float64 host
+    np.testing.assert_allclose(np.asarray(got["hubs"]), want["hubs"],
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got["authorities"]),
+                               want["authorities"], atol=1e-4)
+
+
+def test_hits_against_networkx():
+    networkx = pytest.importorskip("networkx")
+    g, src, dst = _graph(n=120, seed=9)
+    got, _ = hits(g, max_iters=200, tol=1e-10)
+    gg = networkx.DiGraph()
+    gg.add_nodes_from(range(g.n_vertices))
+    gg.add_edges_from(zip(src.tolist(), dst.tolist()))
+    h_ref, a_ref = networkx.hits(gg, max_iter=500, tol=1e-12)
+    h_ref = np.array([h_ref[i] for i in range(g.n_vertices)])
+    a_ref = np.array([a_ref[i] for i in range(g.n_vertices)])
+    # networkx L1-normalizes; compare directions
+    def l1(x):
+        x = np.abs(np.asarray(x, np.float64))
+        return x / max(x.sum(), 1e-12)
+    np.testing.assert_allclose(l1(got["hubs"]), l1(h_ref), atol=1e-4)
+    np.testing.assert_allclose(l1(got["authorities"]), l1(a_ref), atol=1e-4)
+
+
+def test_hits_star_graph():
+    """Edges all point at vertex 0: it is the sole authority, and every
+    spoke is an equal hub."""
+    n = 6
+    src = np.arange(1, n)
+    dst = np.zeros(n - 1, dtype=np.int64)
+    g = G.build_coo(src, dst, n)
+    got, _ = hits(g)
+    auth = np.asarray(got["authorities"])
+    hubs = np.asarray(got["hubs"])
+    assert auth[0] == pytest.approx(1.0)
+    np.testing.assert_allclose(auth[1:], 0.0, atol=1e-7)
+    assert hubs[0] == pytest.approx(0.0, abs=1e-7)
+    np.testing.assert_allclose(hubs[1:], hubs[1], atol=1e-6)
+
+
+def test_hits_empty_graph_is_finite():
+    g = G.build_coo(np.array([], np.int64), np.array([], np.int64), 4)
+    got, _ = hits(g, max_iters=4)
+    assert np.isfinite(np.asarray(got["hubs"])).all()
+    assert np.isfinite(np.asarray(got["authorities"])).all()
+
+
+def test_role_graph_shape():
+    g, src, dst = _graph(n=50, seed=1)
+    rg = role_graph(g)
+    assert rg.n_vertices == 2 * g.n_vertices
+    assert rg.n_edges == 2 * g.n_edges
+
+
+# ----------------------------------------------- extension contract
+
+def test_hits_registered_via_discovery():
+    assert "hits" in R.names()
+    defn = R.get("hits")
+    assert defn.engines == ("local", "distributed")
+
+
+def test_hits_engine_parity_and_cached_shards():
+    g, _, _ = _graph()
+    lo, di = LocalEngine(g), DistributedEngine(g, n_data=4)
+    r_lo, r_di = lo.hits(), di.hits()
+    np.testing.assert_allclose(np.asarray(r_lo.value["hubs"]),
+                               np.asarray(r_di.value["hubs"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_lo.value["authorities"]),
+                               np.asarray(r_di.value["authorities"]),
+                               atol=1e-5)
+    # the doubled-graph shards are derived state, partitioned once
+    assert "hits/sharded" in di.cache
+    shards = di.cache["hits/sharded"]
+    di.hits()
+    assert di.cache["hits/sharded"] is shards
+
+
+def test_hits_through_platform_with_cache():
+    g, _, _ = _graph()
+    plat = GraphPlatform(g, n_data=4)
+    q = GraphQuery.of("hits", max_iters=30)
+    r = plat.query(q)
+    assert r.engine in ("local", "distributed")
+    assert set(r.value) == {"hubs", "authorities"}
+    assert "plan" in r.meta
+    r2 = plat.query(GraphQuery.of("hits", max_iters=30))
+    assert r2.meta.get("cache") == "hit"
+    assert plat.query(GraphQuery.of("hits", max_iters=31)).meta.get(
+        "cache") is None
+
+
+def test_hits_planner_spec():
+    stats = P.GraphStats(1_000_000, 5_000_000, 5_000_000 * 12)
+    spec = P.spec_for("hits", stats)
+    assert spec.output_rows == 2 * stats.n_vertices
+    assert spec.iterations == 30
+    assert P.spec_for("hits", stats, max_iters=5).iterations == 5
+    plan = P.choose_engine(stats, spec, 256)
+    assert plan.engine in ("local", "distributed")
