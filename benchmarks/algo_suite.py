@@ -12,6 +12,10 @@ edit here.  For every algorithm this measures, at each graph scale:
     amortization is exactly the Fig. 5 story);
   * the count-only fast-path time where the algorithm has one (the
     paper's '<2 s count vs ~10 min table' pattern);
+  * every registered execution *variant* where an algorithm has several
+    (triangle counting's bitset vs ELL-intersect paths) — timed
+    separately, asserted equal, with the planner's projected
+    variant-selection crossover reported alongside;
   * the planner's projected crossover scale for a 256-chip mesh — each
     algorithm crosses at a different V because its iteration count,
     state bytes and message volume differ (triangle counting's bitset
@@ -71,15 +75,20 @@ def run(out=print):
         dists = {sym: DistributedEngine(g, n_data=4)
                  for sym, g in graphs.items()}
         for name, defn in _suite():
-            if name == "triangle_count" and n_vertices > 5_000:
-                # O(V^2/32) bitset state: interactive-scale only on one
-                # device; the planner routes larger V distributed.
-                continue
             sym = defn.requires_symmetric
             params = dict(defn.example_params)
             t_local, r_local = time_fn(
                 lambda: locals_[sym].run(defn, params).value)
             out(csv_row(f"algo_suite/{name}_local_v{n_vertices}", t_local))
+            for var in sorted(defn.variants or ()):
+                # each execution strategy timed on its own; the bitset
+                # path at 20k V is exactly the pre-ELL-intersect wall
+                t_var, r_var = time_fn(
+                    lambda: locals_[sym].run(defn, params,
+                                             variant=var).value)
+                _assert_same(f"{name}:{var}", r_local, r_var)
+                out(csv_row(f"algo_suite/{name}_{var}_v{n_vertices}",
+                            t_var))
             if "distributed" in defn.engines:
                 t_dist, r_dist = time_fn(
                     lambda: dists[sym].run(defn, params).value)
@@ -109,6 +118,29 @@ def run(out=print):
                 break
         out(csv_row(f"algo_suite/crossover_{name}", 0.0,
                     f"crossover_at_V={cross}"))
+
+    # variant-selection crossovers: where the planner's cheapest
+    # feasible strategy flips (bitset -> intersect for triangles), and
+    # where the multi-variant plan finally leaves the local engine —
+    # the headline being how far past the bitset wall intersect keeps
+    # triangle queries local
+    for name, defn in R.items():
+        if not defn.variants:
+            continue
+        var_cross = eng_cross = None
+        prev = None
+        for v in [10**3, 10**4, 10**5, 10**6, 10**7, 10**8, 10**9]:
+            stats = P.GraphStats(v, v * 5, v * 5 * 12)
+            plan = P.choose_plan(stats, P.specs_for(name, stats), 256)
+            if prev is not None and plan.variant != prev and not var_cross:
+                var_cross = f"{prev}->{plan.variant}_at_V={v}"
+            prev = plan.variant
+            if plan.engine == "distributed" and eng_cross is None:
+                eng_cross = v
+        out(csv_row(f"algo_suite/variant_crossover_{name}", 0.0,
+                    var_cross or "no_flip"))
+        out(csv_row(f"algo_suite/variant_engine_crossover_{name}", 0.0,
+                    f"local_until_V={eng_cross}"))
     return rows
 
 

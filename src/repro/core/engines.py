@@ -30,6 +30,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import graph as G
+from repro.core import planner as P
 from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, run_pregel
@@ -58,6 +59,7 @@ class Engine:
         self.max_degree = max_degree
         self._sharded: Optional[ShardedCOO] = None
         self._ell: Optional[G.GraphELL] = None
+        self._oriented: Optional[G.OrientedELL] = None
         # Per-algorithm memo: runners stash reusable derived state here
         # (PageRank's normalized partition, HITS' doubled-graph shards).
         self.cache: dict = {}
@@ -84,10 +86,32 @@ class Engine:
                                     self.max_degree, w=w, direction="in")
         return self._ell
 
+    @property
+    def oriented(self) -> G.OrientedELL:
+        """Degree-ordered sorted-neighbor orientation, built once — the
+        derived state of the ELL-intersect triangle path (exact, unlike
+        the capped ``ell``; requires a symmetrized graph)."""
+        if self._oriented is None:
+            coo = self.coo
+            G.require_symmetric(coo, "oriented adjacency")
+            src = np.asarray(coo.src)[: coo.n_edges]
+            dst = np.asarray(coo.dst)[: coo.n_edges]
+            self._oriented = G.build_oriented_ell(src, dst, coo.n_vertices)
+        return self._oriented
+
     # -- generic execution --------------------------------------------------
     def run(self, algorithm, params: Optional[dict] = None,
-            count_only: bool = False) -> QueryResult:
-        """Execute any registered algorithm on this engine's graph."""
+            count_only: bool = False,
+            variant: Optional[str] = None) -> QueryResult:
+        """Execute any registered algorithm on this engine's graph.
+
+        ``variant`` selects one of the definition's registered execution
+        strategies (the platform passes the planner's choice through).
+        Left ``None`` on a multi-variant definition, the engine resolves
+        the cheapest feasible variant for *its own* graph via the cost
+        hook — so a direct ``eng.triangle_count()`` on a huge graph
+        takes the linear-memory path without a planner in sight.
+        """
         defn = R.get(algorithm) if isinstance(algorithm, str) else algorithm
         if self.name not in defn.engines:
             raise ValueError(
@@ -96,14 +120,31 @@ class Engine:
         p = defn.validate(params)
         if defn.requires_symmetric:
             G.require_symmetric(self.coo, defn.name)
+        if variant is None and defn.variants:
+            variant = self._select_variant(defn, p, count_only)
         self.n_runs += 1
         if count_only and defn.count_run is not None:
             value, iters = self._invoke(defn.count_run, defn, p)
             return QueryResult(value, self.name, iters)
-        value, iters = self._invoke(defn.run, defn, p)
+        value, iters = self._invoke(defn.runner_for(variant), defn, p)
         if count_only and defn.count is not None:
             value = defn.count(value)
-        return QueryResult(value, self.name, iters)
+        meta = {"variant": variant} if variant is not None else {}
+        return QueryResult(value, self.name, iters, meta)
+
+    def _select_variant(self, defn: R.AlgorithmDef, params: dict,
+                        count_only: bool) -> Optional[str]:
+        """Cheapest feasible variant for this engine's graph (the same
+        cost hook the planner consults, restricted to this engine)."""
+        if defn.cost is None:
+            return None
+        stats = P.GraphStats.of(self.coo)
+        specs = defn.cost(stats, params, count_only)
+        if isinstance(specs, P.QuerySpec):
+            return specs.variant
+        best = P.best_spec_for_engine(stats, specs, self.name,
+                                      max(self.n_data * self.n_model, 1))
+        return best.variant
 
     def _invoke(self, runner, defn: R.AlgorithmDef, params: dict):
         if isinstance(runner, PregelSpec):
@@ -126,7 +167,7 @@ class Engine:
         defn, count_only = entry
         order = [p.name for p in defn.params]
 
-        def call(*args, **kw):
+        def call(*args, variant=None, **kw):
             if len(args) > len(order):
                 raise TypeError(
                     f"{name}() takes at most {len(order)} positional "
@@ -137,7 +178,8 @@ class Engine:
                 raise TypeError(
                     f"{name}() got multiple values for {sorted(dup)}")
             merged.update(kw)
-            return self.run(defn, merged, count_only=count_only)
+            return self.run(defn, merged, count_only=count_only,
+                            variant=variant)
 
         call.__name__ = name
         call.__doc__ = defn.doc

@@ -20,6 +20,7 @@ user in the query plan, like the paper's rule of thumb was.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
 from repro.core import registry
 
@@ -57,6 +58,10 @@ class QuerySpec:
     edge_bytes_factor: message-volume multiplier over the raw edge bytes
     (1 for scalar messages; label propagation's 2C-channel structured
     messages move ~2C*4/12 times the edge list per superstep).
+    variant: when an algorithm registers several execution strategies
+    (triangle counting's bitset vs ELL-intersect paths), its cost hook
+    returns one QuerySpec per variant and ``choose_plan`` picks the
+    cheapest feasible (engine, variant) pair.
     """
     algorithm: str
     output_rows: int
@@ -64,6 +69,7 @@ class QuerySpec:
     row_bytes: int = 8
     state_bytes_per_vertex: float = 8.0
     edge_bytes_factor: float = 1.0
+    variant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +78,7 @@ class Plan:
     est_local_s: float
     est_dist_s: float
     reason: str
+    variant: Optional[str] = None  # chosen execution variant, if any
 
 
 def estimate_local_cost(g: GraphStats, q: QuerySpec) -> float:
@@ -110,28 +117,87 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
         need = g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices
         return Plan("distributed", tl, td,
                     f"graph + vertex state ({need/1e9:.1f} GB) exceeds "
-                    f"local budget")
+                    f"local budget", variant=q.variant)
     if tl <= td:
         why = ("small output" if q.output_rows <= 1024 else "medium graph")
         return Plan("local", tl, td, f"local wins ({why}): "
-                    f"{tl*1e3:.2f} ms vs {td*1e3:.2f} ms")
+                    f"{tl*1e3:.2f} ms vs {td*1e3:.2f} ms", variant=q.variant)
     return Plan("distributed", tl, td,
-                f"distributed wins (scale/output): {td*1e3:.2f} ms vs {tl*1e3:.2f} ms")
+                f"distributed wins (scale/output): {td*1e3:.2f} ms vs {tl*1e3:.2f} ms",
+                variant=q.variant)
+
+
+def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
+                n_chips: int) -> Plan:
+    """Pick the cheapest feasible (engine, variant) pair.
+
+    With one spec this is exactly :func:`choose_engine` (same Plan, same
+    reason strings).  With several — one per registered execution
+    variant — every (spec, engine) combination is costed and the global
+    minimum wins; a variant whose state fits one device can keep a query
+    local that another variant's memory footprint would force
+    distributed (triangle counting's ELL-intersect vs bitset paths).
+    Ties prefer earlier specs, so the registration order is the
+    tie-break for interactive-scale graphs.
+    """
+    specs = list(specs)
+    if len(specs) == 1:
+        return choose_engine(g, specs[0], n_chips)
+    best, best_cost = None, float("inf")
+    for q in specs:
+        plan = choose_engine(g, q, n_chips)
+        # the distributed estimate is always finite, so every spec has a
+        # finite comparison cost and the first one seeds ``best``
+        cost = plan.est_local_s if plan.engine == "local" else plan.est_dist_s
+        if best is None or cost < best_cost:
+            best, best_cost = plan, cost
+    if best.variant is not None:
+        best = dataclasses.replace(
+            best, reason=f"variant {best.variant}: {best.reason}")
+    return best
+
+
+def best_spec_for_engine(g: GraphStats, specs: Sequence[QuerySpec],
+                         engine: str, n_chips: int = 1) -> QuerySpec:
+    """Cheapest feasible variant *given* an engine — how an engine called
+    directly (no platform/plan in sight) resolves a variant, and how the
+    platform re-picks after ``force_engine`` or a capability clamp."""
+    specs = list(specs)
+
+    def cost(q):
+        if engine == "local":
+            return estimate_local_cost(g, q)
+        return estimate_dist_cost(g, q, n_chips)
+
+    return min(specs, key=cost)
 
 
 # Query specs come from each algorithm's registered cost hook --------------
 
-def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
-             **params) -> QuerySpec:
-    """Delegate to the algorithm's registered cost hook.
+def specs_for(algorithm: str, g: GraphStats, count_only: bool = False,
+              **params) -> tuple[QuerySpec, ...]:
+    """All of an algorithm's QuerySpecs — one per execution variant.
 
     ``params`` are merged over the schema defaults, so user-supplied
     caps (``max_iters``) and planner hints (``expected_pairs``,
     ``n_channels``) flow into the estimate.  Algorithms without a cost
     hook get a conservative per-vertex-output, one-superstep spec.
+    Single-variant cost hooks return a bare QuerySpec; multi-variant
+    hooks return a sequence with ``variant`` set on every entry.
     """
     defn = registry.get(algorithm)
     merged = defn.validate(params, partial=True)
     if defn.cost is None:
-        return QuerySpec(algorithm, 1 if count_only else g.n_vertices)
-    return defn.cost(g, merged, count_only)
+        return (QuerySpec(algorithm, 1 if count_only else g.n_vertices),)
+    spec = defn.cost(g, merged, count_only)
+    if isinstance(spec, QuerySpec):
+        return (spec,)
+    return tuple(spec)
+
+
+def spec_for(algorithm: str, g: GraphStats, count_only: bool = False,
+             **params) -> QuerySpec:
+    """The algorithm's *primary* spec (first registered variant) — the
+    single-spec view most callers and calibration sweeps want; variant
+    routing goes through :func:`specs_for` + :func:`choose_plan`."""
+    return specs_for(algorithm, g, count_only, **params)[0]

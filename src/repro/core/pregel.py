@@ -22,6 +22,7 @@ magnitude faster than a dataflow engine that materializes every round.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import jax
@@ -136,7 +137,44 @@ def _shard_combine(agg, op, axis):
     return _psum_like(agg, op, axis)
 
 
-_JIT_CACHE: dict = {}
+# Bounded LRU of jitted superstep programs.  Keys are *structural*:
+# meshes enter as (axis names/types, shape, device ids), never as the
+# Mesh object — unbounded Mesh-keyed entries used to pin device state
+# for the life of the process.  A cached *mesh-path* program still
+# closes over the mesh it was built with (shard_map needs one), so a
+# dead Mesh can linger until its entry ages out of the LRU; the bound
+# is what turns that from a leak into a window.
+_JIT_CACHE: OrderedDict = OrderedDict()
+JIT_CACHE_MAX = 64
+
+
+def _mesh_cache_key(mesh):
+    if mesh is None:
+        return None
+    # axis_types distinguishes semantically different meshes over the
+    # same devices (Auto vs Explicit axes) on jax versions that have it
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat),
+            str(getattr(mesh, "axis_types", None)))
+
+
+def _jit_cache_get(key):
+    """Returns (cached fn or None, hashable key or None)."""
+    try:
+        fn = _JIT_CACHE.get(key)
+    except TypeError:              # unhashable spec (closure consts)
+        return None, None
+    if fn is not None:
+        _JIT_CACHE.move_to_end(key)
+    return fn, key
+
+
+def _jit_cache_put(key, fn) -> None:
+    if key is None:
+        return
+    _JIT_CACHE[key] = fn
+    while len(_JIT_CACHE) > JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
 
 
 def run_pregel(
@@ -221,31 +259,29 @@ def run_pregel(
 
     # jit-cache: repeated queries on the same engine must not re-trace
     # (the 'consistent query performance' property of the local engine)
-    key = (spec, max_iters, mesh, axis_data, axis_model, V, v_local,
-           sg.n_data, sg.n_model, sg.e_shard,
+    key = (spec, max_iters, _mesh_cache_key(mesh), axis_data, axis_model,
+           V, v_local, sg.n_data, sg.n_model, sg.e_shard,
            init_state.shape, str(init_state.dtype))
+    fn, key = _jit_cache_get(key)
     if mesh is None:
         # Single-device: shards concatenated — treat as one big shard.
         # (2-D vertex-sharded layouts only make sense on a mesh.)
         assert not sharded, "vertex-sharded layout requires a mesh"
-        try:
-            fn = _JIT_CACHE.get(key)
-        except TypeError:          # unhashable spec (closure consts)
-            fn, key = None, None
         if fn is None:
             fn = jax.jit(body)
-            if key is not None:
-                _JIT_CACHE[key] = fn
+            _jit_cache_put(key, fn)
         return fn(sg.src, sg.dst, sg.w, init_state)
 
-    edge_spec = P((axis_data, axis_model)) if sharded else P(axis_data)
-    state_spec = P(axis_model) if sharded else P()
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(edge_spec, edge_spec, edge_spec, state_spec),
-        out_specs=(state_spec, P()),
-        check_vma=False,
-    )
+    if fn is None:
+        edge_spec = P((axis_data, axis_model)) if sharded else P(axis_data)
+        state_spec = P(axis_model) if sharded else P()
+        fn = jax.jit(shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(edge_spec, edge_spec, edge_spec, state_spec),
+            out_specs=(state_spec, P()),
+            check_vma=False,
+        ))
+        _jit_cache_put(key, fn)
     with mesh:
-        return jax.jit(fn)(sg.src, sg.dst, sg.w, init_state)
+        return fn(sg.src, sg.dst, sg.w, init_state)

@@ -19,9 +19,14 @@ so a newly registered algorithm is queryable with zero edits here.
 ``GraphPlatform`` keeps two LRU caches for the paper's interactive query
 class ("<2 s count vs ~10 min table"): a *plan* cache (cost model +
 routing per distinct query shape) and a *result* cache keyed on
-``(graph identity, algorithm, frozen params, count_only, engine)`` —
-a repeated identical query on a resident graph returns the cached result
-without re-tracing or re-running anything.
+``(graph content digest, algorithm, frozen params, count_only,
+engine)`` — a repeated identical query on a resident graph returns the
+cached result without re-tracing or re-running anything.  Keying on the
+content digest (not ``id()``, which CPython recycles the moment a graph
+is garbage-collected) makes the cache sound across graph lifetimes and
+lets byte-identical reloaded snapshots share entries: pass one mapping
+as ``result_cache`` to several platforms and a query answered for a
+graph is a hit for every later platform built over the same bytes.
 """
 from __future__ import annotations
 
@@ -119,7 +124,8 @@ class GraphPlatform:
 
     def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
                  n_model: int = 1, local_max_degree: int = 128,
-                 force_engine: Optional[str] = None, cache_size: int = 128):
+                 force_engine: Optional[str] = None, cache_size: int = 128,
+                 result_cache: Optional[OrderedDict] = None):
         self.coo = coo
         self.mesh = mesh
         self.stats = P.GraphStats.of(coo)
@@ -136,7 +142,11 @@ class GraphPlatform:
             self.n_chips = max(n_data * n_model, 1)
         self.cache_size = cache_size
         self._plan_cache: OrderedDict = OrderedDict()
-        self._result_cache: OrderedDict = OrderedDict()
+        # result entries are keyed on the graph's *content digest*, so a
+        # caller-supplied mapping may be shared across platforms (the
+        # reloaded-snapshot case) without ever serving a stale result
+        self._result_cache: OrderedDict = (
+            OrderedDict() if result_cache is None else result_cache)
         self.cache_stats = {"hits": 0, "misses": 0}
 
     # lazy engine construction: building ELL/partitions is ETL work we
@@ -179,15 +189,17 @@ class GraphPlatform:
             return None
 
     def plan(self, q: GraphQuery) -> P.Plan:
-        """Cost both engines and pick one (cached per query shape)."""
+        """Cost every (engine, variant) pair and pick one (cached per
+        query shape)."""
         key = self._query_key(q)
         cached = self._lru_get(self._plan_cache, key)
         if cached is not None:
             return cached
         defn = R.get(q.algorithm)
-        spec = P.spec_for(q.algorithm, self.stats, count_only=q.count_only,
-                          **q.params)
-        plan = P.choose_engine(self.stats, spec, self.n_chips)
+        specs = P.specs_for(q.algorithm, self.stats, count_only=q.count_only,
+                            **q.params)
+        plan = P.choose_plan(self.stats, specs, self.n_chips)
+        chosen_engine = plan.engine
         if self.force_engine:
             plan = dataclasses.replace(plan, engine=self.force_engine,
                                        reason=f"forced: {self.force_engine}")
@@ -197,20 +209,31 @@ class GraphPlatform:
                 plan, engine=defn.engines[0],
                 reason=f"{q.algorithm} runs on {'/'.join(defn.engines)} "
                        f"only")
+        if len(specs) > 1 and plan.engine != chosen_engine:
+            # engine was overridden: re-pick the cheapest variant for it
+            best = P.best_spec_for_engine(self.stats, specs, plan.engine,
+                                          self.n_chips)
+            plan = dataclasses.replace(plan, variant=best.variant)
         self._lru_put(self._plan_cache, key, plan)
         return plan
 
     def query(self, q: GraphQuery) -> QueryResult:
         plan = self.plan(q)
         qkey = self._query_key(q)
-        key = None if qkey is None else (id(self.coo), plan.engine) + qkey
+        # content digest, not id(): a recycled address must never alias
+        # a dead graph's results, and byte-identical reloads must share.
+        # The variant is deliberately absent — variants are contractually
+        # interchangeable, so either one's result answers the query.
+        key = None if qkey is None else \
+            (self.coo.content_digest(), plan.engine) + qkey
         hit = self._lru_get(self._result_cache, key)
         if hit is not None:
             self.cache_stats["hits"] += 1
             return dataclasses.replace(hit, meta={**hit.meta, "cache": "hit"})
         self.cache_stats["misses"] += 1
         eng = self.local if plan.engine == "local" else self.distributed
-        r = eng.run(q.algorithm, q.params, count_only=q.count_only)
+        r = eng.run(q.algorithm, q.params, count_only=q.count_only,
+                    variant=plan.variant)
         r.meta["plan"] = plan
         self._lru_put(self._result_cache, key, r)
         return r

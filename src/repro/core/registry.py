@@ -76,9 +76,17 @@ class AlgorithmDef:
               ~10 min table' class).  Takes the same signature as a
               callable ``run`` and may ignore parameters.
     cost    : planner hook ``(GraphStats, params, count_only) ->
-              QuerySpec``; receives schema defaults merged under any
-              user-supplied params, so user caps like ``max_iters`` flow
-              into the cost model.
+              QuerySpec`` — or a *sequence* of QuerySpecs, one per
+              execution variant (each with ``variant`` set); receives
+              schema defaults merged under any user-supplied params, so
+              user caps like ``max_iters`` flow into the cost model.
+    variants: optional mapping ``variant name -> runner`` for algorithms
+              with several execution strategies that produce identical
+              results (triangle counting's bitset vs ELL-intersect
+              paths).  The planner picks the cheapest feasible variant
+              per (graph, engine) from the cost hook's QuerySpecs; an
+              engine invoked without a plan resolves one the same way.
+              ``run`` stays the fallback when no variant is selected.
     engines : capability flags; which engines can execute the
               definition (``("local",)`` for ELL-batch workloads that
               are inherently single-device).
@@ -98,6 +106,7 @@ class AlgorithmDef:
     count: Optional[Callable[[Any], Any]] = None
     count_run: Optional[Callable[..., tuple]] = None
     cost: Optional[Callable[..., Any]] = None
+    variants: Optional[Mapping[str, Any]] = None
     engines: tuple[str, ...] = ("local", "distributed")
     requires_symmetric: bool = False
     method: Optional[str] = None
@@ -109,6 +118,17 @@ class AlgorithmDef:
     @property
     def has_count_path(self) -> bool:
         return self.count is not None or self.count_run is not None
+
+    def runner_for(self, variant: Optional[str]):
+        """Resolve the runner for ``variant`` (None -> default ``run``)."""
+        if variant is None:
+            return self.run
+        if not self.variants or variant not in self.variants:
+            known = sorted(self.variants or ())
+            raise ValueError(
+                f"{self.name}: unknown variant {variant!r}; "
+                f"registered: {known}")
+        return self.variants[variant]
 
     def defaults(self) -> dict:
         """Schema defaults (required parameters omitted)."""

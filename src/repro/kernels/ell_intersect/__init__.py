@@ -1,0 +1,2 @@
+from repro.kernels.ell_intersect.ops import (
+    ell_intersect, ell_intersect_counts, ell_intersect_rows_ref)

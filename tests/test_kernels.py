@@ -7,6 +7,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.ell_combine.ops import ell_spmv, ell_spmv_ref
+from repro.kernels.ell_intersect.ops import (
+    ell_intersect, ell_intersect_rows_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_reference
 
@@ -54,6 +56,58 @@ def test_ell_spmv_matches_dense_matmul():
     got = np.asarray(ell_spmv(jnp.asarray(nbr), jnp.asarray(mask),
                               jnp.asarray(w), jnp.asarray(x), op="sum"))
     np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- ell_intersect
+
+def _sorted_rows(rng, e, k, vx, fill=0.6):
+    """Random sorted, deduped, sentinel-padded rows (the OrientedELL
+    row invariant); sentinel == vx."""
+    rows = np.full((e, k), vx, dtype=np.int32)
+    for i in range(e):
+        n = rng.integers(0, int(k * fill) + 1)
+        vals = rng.choice(vx, size=min(n, vx), replace=False)
+        vals.sort()
+        rows[i, : len(vals)] = vals
+    return rows
+
+
+@pytest.mark.parametrize("e,k,vx", [(16, 8, 40), (100, 37, 64),
+                                    (256, 128, 500), (7, 200, 300)])
+def test_ell_intersect_shapes(e, k, vx):
+    """Pallas (interpret on CPU) vs searchsorted reference vs python
+    sets, over ragged shapes that exercise lane/sublane padding."""
+    rng = np.random.default_rng(e * k)
+    a = _sorted_rows(rng, e, k, vx)
+    b = _sorted_rows(rng, e, k, vx)
+    got = np.asarray(ell_intersect(jnp.asarray(a), jnp.asarray(b), vx))
+    ref = np.asarray(ell_intersect_rows_ref(jnp.asarray(a),
+                                            jnp.asarray(b), vx))
+    want = np.array([len(set(ra[ra < vx]) & set(rb[rb < vx]))
+                     for ra, rb in zip(a, b)])
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(ref, want)
+
+
+def test_ell_intersect_sentinel_rows_count_zero():
+    """All-sentinel rows (padding edges gathering the padding row) must
+    contribute nothing — sentinel never matches sentinel."""
+    vx = 32
+    a = np.full((8, 16), vx, dtype=np.int32)
+    b = np.full((8, 16), vx, dtype=np.int32)
+    b[0, :3] = [1, 5, 9]
+    for fn in (ell_intersect, ell_intersect_rows_ref):
+        got = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), vx))
+        assert (got == 0).all()
+
+
+def test_ell_intersect_identical_rows():
+    vx = 100
+    row = np.array([2, 3, 5, 7, 11, vx, vx, vx], dtype=np.int32)
+    a = np.tile(row, (8, 1))
+    for fn in (ell_intersect, ell_intersect_rows_ref):
+        got = np.asarray(fn(jnp.asarray(a), jnp.asarray(a), vx))
+        assert (got == 5).all()
 
 
 # ------------------------------------------------------------ flash attention

@@ -1,0 +1,313 @@
+"""The two triangle-counting variants and the caches they lean on.
+
+Covers the tentpole and its satellites:
+
+* parity of the ELL-intersect variant vs the bitset variant vs the dense
+  ``trace(A^3)/6`` oracle — random, star, self-loop and empty graphs, on
+  both engines;
+* planner variant selection: bitset for small interactive graphs,
+  intersect beyond, flipping exactly once, and large-V triangle queries
+  staying *local* where bitset memory alone would have forced them
+  distributed;
+* the result-cache identity fix: content-digest keys can never serve a
+  dead graph's results to a new graph at a recycled address, and
+  byte-identical reloaded snapshots *share* entries;
+* the bounded pregel jit cache with structural (Mesh-free) keys;
+* the scale acceptance run: a graph whose bitset state alone exceeds
+  ``LOCAL_MEM_BUDGET`` completes locally via the intersect variant and
+  matches per-edge set-intersection oracles on a subsample.
+"""
+import gc
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import pregel
+from repro.core.algorithms.triangles import (
+    triangle_count_intersect, triangle_count_reference)
+from repro.core.engines import DistributedEngine, LocalEngine
+from repro.core.query import GraphPlatform, GraphQuery
+from repro.data import synthetic as S
+
+N = 250
+
+
+def _random_graph(n=N, seed=3):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, 6 * n)
+    dst = rng.integers(0, n, 6 * n)
+    return G.build_coo(src, dst, n, symmetrize=True), src, dst
+
+
+def _star_graph(n=64):
+    leaves = np.arange(1, n)
+    return (G.build_coo(np.zeros(n - 1, np.int64), leaves, n,
+                        symmetrize=True),
+            np.zeros(n - 1, np.int64), leaves)
+
+
+def _self_loop_graph():
+    src = np.array([0, 1, 2, 0, 3, 3])
+    dst = np.array([1, 2, 0, 0, 3, 1])      # K3 + self-loops + pendant
+    return G.build_coo(src, dst, 4, symmetrize=True), src, dst
+
+
+def _empty_graph(n=5):
+    e = np.array([], dtype=np.int64)
+    return G.build_coo(e, e, n, symmetrize=True), e, e
+
+
+GRAPHS = {
+    "random": _random_graph,
+    "star": _star_graph,
+    "self_loop": _self_loop_graph,
+    "empty": _empty_graph,
+}
+
+
+@pytest.mark.parametrize("kind", sorted(GRAPHS))
+@pytest.mark.parametrize("engine", ["local", "distributed"])
+def test_variant_parity_and_oracle(kind, engine):
+    g, src, dst = GRAPHS[kind]()
+    eng = (LocalEngine(g) if engine == "local"
+           else DistributedEngine(g, n_data=4))
+    want = triangle_count_reference(src, dst, g.n_vertices)
+    r_bit = eng.run("triangle_count", variant="bitset")
+    r_int = eng.run("triangle_count", variant="intersect")
+    assert r_bit.value == want, f"{kind}/{engine}: bitset"
+    assert r_int.value == want, f"{kind}/{engine}: intersect"
+    assert r_bit.meta["variant"] == "bitset"
+    assert r_int.meta["variant"] == "intersect"
+
+
+def test_direct_intersect_path_matches_oracle():
+    g, src, dst = _random_graph(seed=11)
+    count, per_edge = triangle_count_intersect(g)
+    assert count == triangle_count_reference(src, dst, g.n_vertices)
+    assert per_edge.sum() == count
+    assert per_edge.shape[0] == G.build_oriented_ell(
+        np.asarray(g.src)[: g.n_edges], np.asarray(g.dst)[: g.n_edges],
+        g.n_vertices).n_edges
+
+
+def test_unknown_variant_rejected():
+    g, _, _ = _self_loop_graph()
+    with pytest.raises(ValueError, match="unknown variant"):
+        LocalEngine(g).run("triangle_count", variant="quantum")
+
+
+def test_oriented_ell_invariants():
+    """Each undirected edge survives orientation exactly once, rows are
+    sorted/deduped, and out-degrees stay below the sqrt(2E) bound."""
+    g, _, _ = _random_graph(seed=5)
+    src = np.asarray(g.src)[: g.n_edges]
+    dst = np.asarray(g.dst)[: g.n_edges]
+    o = G.build_oriented_ell(src, dst, g.n_vertices)
+    undirected = {frozenset((int(a), int(b)))
+                  for a, b in zip(src, dst) if a != b}
+    eu = np.asarray(o.eu)[: o.n_edges]
+    ev = np.asarray(o.ev)[: o.n_edges]
+    assert o.n_edges == len(undirected)
+    assert {frozenset((int(a), int(b)))
+            for a, b in zip(eu, ev)} == undirected
+    nbr = np.asarray(o.nbr)
+    assert (np.diff(nbr, axis=1) >= 0).all()          # sorted rows
+    valid = nbr < g.n_vertices
+    assert (np.diff(nbr, axis=1)[valid[:, 1:] & valid[:, :-1]] > 0).all()
+    assert (nbr[-1] == g.n_vertices).all()            # padding-gather row
+    out_deg = (nbr < g.n_vertices).sum(axis=1)
+    assert out_deg.max() <= np.sqrt(2 * o.n_edges) + 1
+
+
+# ------------------------------------------------------- planner routing
+
+def _variant_plan(v, n_chips=256):
+    g = P.GraphStats(v, v * 5, v * 5 * 12)
+    return P.choose_plan(g, P.specs_for("triangle_count", g), n_chips)
+
+
+def test_variant_selection_flips_once_at_small_v():
+    """Bitset wins the interactive regime, intersect everything beyond,
+    with a single flip in the low thousands of vertices."""
+    vs = [300, 1_000, 3_000, 10_000, 100_000, 1_000_000]
+    variants = [_variant_plan(v).variant for v in vs]
+    assert variants[0] == "bitset"
+    assert variants[-1] == "intersect"
+    flips = sum(a != b for a, b in zip(variants, variants[1:]))
+    assert flips == 1
+    flip_v = vs[variants.index("intersect")]
+    assert flip_v <= 100_000
+
+
+def test_intersect_keeps_large_v_local():
+    """The tentpole routing claim: where bitset state alone exceeds the
+    local budget (V ~ 2M: ~500 GB), the planner now keeps the query on
+    the local engine via the linear-memory variant instead of forcing it
+    distributed-by-memory."""
+    v = 2_000_000
+    g = P.GraphStats(v, v * 5, v * 5 * 12)
+    specs = {s.variant: s for s in P.specs_for("triangle_count", g)}
+    assert P.estimate_local_cost(g, specs["bitset"]) == float("inf")
+    assert P.estimate_local_cost(g, specs["intersect"]) < float("inf")
+    plan = P.choose_plan(g, list(specs.values()), 256)
+    assert plan.engine == "local"
+    assert plan.variant == "intersect"
+
+
+def test_cost_hook_uses_ceil_words():
+    """Satellite fix: the bitset cost is sized with ceil(V/32) like the
+    runner, not floor — V=33 needs 2 words, not 1."""
+    g = P.GraphStats(33, 100, 1200)
+    spec = {s.variant: s for s in P.specs_for("triangle_count", g)}
+    assert spec["bitset"].state_bytes_per_vertex == 4.0 * 2
+
+
+def test_single_spec_choose_plan_matches_choose_engine():
+    g = P.GraphStats(1_000_000, 5_000_000, 60_000_000)
+    spec = P.spec_for("pagerank", g)
+    assert P.choose_plan(g, [spec], 256) == P.choose_engine(g, spec, 256)
+
+
+def test_platform_plan_carries_variant_and_runs_it():
+    g, src, dst = _random_graph(seed=2)
+    plat = GraphPlatform(g)
+    q = GraphQuery.triangle_count()
+    plan = plat.plan(q)
+    assert plan.variant == "bitset"              # N=250 is interactive
+    r = plat.query(q)
+    assert r.value == triangle_count_reference(src, dst, g.n_vertices)
+    assert r.meta["variant"] == "bitset"
+
+
+def test_forced_engine_repicks_variant_for_that_engine():
+    g, src, dst = _random_graph(seed=2)
+    plat = GraphPlatform(g, n_data=4, force_engine="distributed")
+    r = plat.query(GraphQuery.triangle_count())
+    assert r.engine == "distributed"
+    assert r.meta["variant"] in ("bitset", "intersect")
+    assert r.value == triangle_count_reference(src, dst, g.n_vertices)
+
+
+# ------------------------------------------------- result-cache identity
+
+def test_stale_id_regression_across_graph_lifetimes():
+    """Two successive platforms over *distinct* graphs, the first freed
+    before the second is built, sharing one result store: the second
+    must never be served the dead graph's cached result (the old
+    ``id()`` key would alias them whenever CPython recycled the
+    address)."""
+    shared = OrderedDict()
+    for round_ in range(5):
+        tri = GraphQuery.triangle_count()
+        n = 3 + round_               # distinct content every round
+        g1 = G.build_coo(np.array([0, 1, 2]), np.array([1, 2, 0]), n,
+                         symmetrize=True)
+        p1 = GraphPlatform(g1, result_cache=shared)
+        assert p1.query(tri).value == 1
+        del p1, g1
+        gc.collect()
+        g2 = G.build_coo(np.array([0, 1]), np.array([1, 2]), n,
+                         symmetrize=True)          # path: no triangle
+        p2 = GraphPlatform(g2, result_cache=shared)
+        r2 = p2.query(tri)
+        assert r2.value == 0, f"stale cache hit on round {round_}"
+        assert r2.meta.get("cache") != "hit"
+        del p2, g2
+        gc.collect()
+
+
+def test_reloaded_snapshot_shares_cache_entries():
+    """A byte-identical reloaded graph is a result-cache *hit* through a
+    shared store — the ROADMAP snapshot-sharing item."""
+    shared = OrderedDict()
+    src, dst = S.user_follow_graph(200, 3.0, seed=21)
+    g1 = G.build_coo(src, dst, 200, symmetrize=True)
+    p1 = GraphPlatform(g1, result_cache=shared)
+    q = GraphQuery.connected_components(count_only=True)
+    v1 = p1.query(q).value
+    assert p1.cache_stats == {"hits": 0, "misses": 1}
+    # reload the same snapshot: new arrays, new objects, same bytes
+    g2 = G.build_coo(src.copy(), dst.copy(), 200, symmetrize=True)
+    assert g2.content_digest() == g1.content_digest()
+    p2 = GraphPlatform(g2, result_cache=shared)
+    r2 = p2.query(q)
+    assert r2.meta.get("cache") == "hit"
+    assert r2.value == v1
+    assert p2.cache_stats == {"hits": 1, "misses": 0}
+    assert p2.local.n_runs == 0            # engine never touched
+
+
+def test_content_digest_identity():
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 0])
+    a = G.build_coo(src, dst, 3, symmetrize=True)
+    b = G.build_coo(src, dst, 3, symmetrize=True)
+    c = G.build_coo(src, dst[::-1].copy(), 3, symmetrize=True)
+    assert a.content_digest() == b.content_digest()
+    assert a.content_digest() != c.content_digest()
+    assert a.content_digest() is a.content_digest()      # memoized
+    # padding must not matter: same edges, different pad width
+    d = G.build_coo(src, dst, 3, symmetrize=True, pad_multiple=2048)
+    assert d.content_digest() == a.content_digest()
+
+
+# ------------------------------------------------- bounded pregel jit LRU
+
+def test_pregel_jit_cache_bounded_and_mesh_free(monkeypatch):
+    from repro.core.partition import partition
+    from repro.core.pregel import PregelSpec, run_pregel
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    monkeypatch.setattr(pregel, "JIT_CACHE_MAX", 2)
+    monkeypatch.setattr(pregel, "_JIT_CACHE", OrderedDict())
+    g = G.build_coo(np.array([0, 1, 2]), np.array([1, 2, 0]), 3)
+    sg = partition(g, 1, 1)
+    spec = PregelSpec(message=lambda s, w: s, combine="sum",
+                      apply=lambda old, agg, ids, gval: agg, identity=0.0)
+    for iters in (1, 2, 3, 4):
+        run_pregel(spec, sg, jnp.zeros(3), max_iters=iters)
+    assert len(pregel._JIT_CACHE) == 2               # bounded, LRU
+    for key in pregel._JIT_CACHE:
+        assert not any(isinstance(part, Mesh) for part in key)
+    # a repeat is a hit: the entry moves to MRU and nothing is evicted
+    before = list(pregel._JIT_CACHE)
+    run_pregel(spec, sg, jnp.zeros(3), max_iters=3)
+    assert list(pregel._JIT_CACHE) == [before[1], before[0]]
+
+
+# ------------------------------------------------------- scale acceptance
+
+def test_past_the_bitset_wall_local_intersect():
+    """A graph whose bitset state alone (~4*ceil(V/32)*V bytes) exceeds
+    LOCAL_MEM_BUDGET must still complete *locally* via the intersect
+    variant, and match per-edge set-intersection oracles on a
+    subsample."""
+    V = 600_000
+    words = -(-V // 32)
+    assert 4.0 * words * V > P.LOCAL_MEM_BUDGET      # past the wall
+    src, dst = S.user_follow_graph(V, 2.0, seed=9)
+    g = G.build_coo(src, dst, V, symmetrize=True)
+    plat = GraphPlatform(g)
+    plan = plat.plan(GraphQuery.triangle_count())
+    assert plan.engine == "local"
+    assert plan.variant == "intersect"
+    r = plat.query(GraphQuery.triangle_count())
+    assert r.engine == "local"
+    assert r.meta["variant"] == "intersect"
+    # subsampled oracle: per-edge counts vs numpy set intersection
+    o = plat.local.oriented
+    from repro.kernels.ell_intersect import ell_intersect_counts
+    counts = ell_intersect_counts(o)
+    assert int(counts.sum()) == r.value
+    eu = np.asarray(o.eu)[: o.n_edges]
+    ev = np.asarray(o.ev)[: o.n_edges]
+    nbr = np.asarray(o.nbr)
+    rng = np.random.default_rng(0)
+    for i in rng.choice(o.n_edges, 200, replace=False):
+        a, b = nbr[eu[i]], nbr[ev[i]]
+        want = len(np.intersect1d(a[a < V], b[b < V]))
+        assert counts[i] == want
