@@ -21,9 +21,16 @@ edit here.  For every algorithm this measures, at each graph scale:
     state bytes and message volume differ (triangle counting's bitset
     state crosses earliest, degree-like scans latest).
 
-Results double as calibration input for the planner constants.
+Results double as calibration input for the planner constants:
+``--emit-calibration profile.json`` fits one measured/modeled wall-clock
+ratio per algorithm from the sweep and writes a
+``planner.CalibrationProfile`` that ``planner.load_calibration`` applies
+process-wide — including the service tier thresholds, which are derived
+from the measured interactive (count-path) latencies.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -67,7 +74,11 @@ def _assert_same(name: str, a, b) -> None:
         assert (a == b).all(), name
 
 
-def run(out=print):
+def run(out=print, samples=None):
+    """The sweep.  ``samples``, when given, is filled with calibration
+    inputs: per-algorithm ``[(measured_s, modeled_s), ...]`` pairs for
+    the local engine, plus measured count-path latencies under the
+    ``"_count_times"`` key (the tier-threshold input)."""
     rows = []
     for n_vertices in [2_000, 20_000]:
         graphs = {sym: _build(n_vertices, sym) for sym in (False, True)}
@@ -80,6 +91,16 @@ def run(out=print):
             t_local, r_local = time_fn(
                 lambda: locals_[sym].run(defn, params).value)
             out(csv_row(f"algo_suite/{name}_local_v{n_vertices}", t_local))
+            if samples is not None:
+                # measured-vs-modeled under the *analytic* defaults so a
+                # previously loaded profile never skews a re-fit
+                stats = P.GraphStats.of(graphs[sym])
+                spec = P.best_spec_for_engine(
+                    stats, P.specs_for(name, stats, **params), "local")
+                modeled = P.estimate_local_cost(
+                    stats, spec, profile=P.CalibrationProfile())
+                if np.isfinite(modeled):
+                    samples.setdefault(name, []).append((t_local, modeled))
             for var in sorted(defn.variants or ()):
                 # each execution strategy timed on its own; the bitset
                 # path at 20k V is exactly the pre-ELL-intersect wall
@@ -102,6 +123,8 @@ def run(out=print):
                 out(csv_row(
                     f"algo_suite/{name}_count_v{n_vertices}", t_count,
                     f"count_vs_table={t_local / max(t_count, 1e-9):.2f}x"))
+                if samples is not None:
+                    samples.setdefault("_count_times", []).append(t_count)
             rows.append((name, n_vertices, t_local))
 
     # planner-projected crossover per algorithm on the production mesh —
@@ -144,5 +167,50 @@ def run(out=print):
     return rows
 
 
+def emit_calibration(path, samples, out=print) -> P.CalibrationProfile:
+    """Fit a :class:`planner.CalibrationProfile` from sweep samples and
+    write it to ``path``.
+
+    Per algorithm, the measured per-algorithm constant is the median
+    measured/modeled wall-clock ratio over the sweep's scales — the one
+    multiplier that anchors that algorithm's analytic estimate to real
+    executions on this box.  The interactive tier threshold is derived
+    from the measured count-path latencies (the paper's interactive
+    query class): generously above every observed one, so genuinely
+    interactive shapes classify interactive while table-scale work
+    stays batch.  Empty ``samples`` writes the analytic defaults — the
+    profile round-trips regardless.
+    """
+    scales = {}
+    for name, pairs in samples.items():
+        if name.startswith("_") or not pairs:
+            continue
+        ratios = sorted(t / m for t, m in pairs if m > 0)
+        scales[name] = float(np.median(ratios))
+    kwargs = {}
+    count_times = samples.get("_count_times") or []
+    if count_times:
+        kwargs["interactive_threshold_s"] = float(
+            max(10.0 * max(count_times), 1e-3))
+    profile = P.CalibrationProfile(
+        algo_time_scale=scales, source="benchmarks/algo_suite.py", **kwargs)
+    profile.to_json(path)
+    out(csv_row("algo_suite/calibration_written", 0.0,
+                f"path={path} algorithms={len(scales)}"))
+    return profile
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-calibration", metavar="PATH", default=None,
+                    help="write measured per-algorithm planner constants "
+                         "to PATH (loadable via planner.load_calibration)")
+    args = ap.parse_args(argv)
+    samples: dict = {}
+    run(samples=samples if args.emit_calibration else None)
+    if args.emit_calibration:
+        emit_calibration(args.emit_calibration, samples)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -5,4 +5,6 @@ from repro.core import partition
 from repro.core import pregel
 from repro.core import planner
 from repro.core.engines import LocalEngine, DistributedEngine
+from repro.core.service import (AdmissionRejected, GraphAnalyticsService,
+                                GraphContext, QueryTicket)
 from repro.core.query import GraphQuery, GraphPlatform

@@ -22,14 +22,18 @@ and vertex ``V + v`` is v's authority role, and every directed edge
     V + v -> u          (authorities feed hubs)
 
 One superstep on this graph performs one simultaneous HITS update for
-both score vectors.  Updates are unnormalized on device; the host
-re-normalizes each half every ``burst`` supersteps (short enough that
-float32 cannot overflow: one burst grows values by at most the role
-matrix's spectral radius squared) and stops when both unit vectors are
-stable to ``tol``.  Scores are returned L2-normalized.
+both score vectors.  The per-half L2 renormalization runs *inside* the
+superstep: ``global_value`` (computed over the **new** aggregate —
+``global_over_agg``) reduces the fresh hub/authority sums to their
+squared norms, and ``apply`` divides each half by its own norm.  The
+whole iteration — update, normalize, convergence test — is therefore a
+single XLA while-loop like every other fixpoint algorithm here, with no
+host round-trips (the old formulation broke the loop every 2 supersteps
+to renormalize on the host).  Scores are returned L2-normalized.
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Optional
 
 import jax.numpy as jnp
@@ -41,17 +45,39 @@ from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
 from repro.core.pregel import PregelSpec, run_pregel
 
-# One simultaneous (hub, authority) update: plain weighted sum along the
-# doubled graph's in-edges — the whole algorithm is this spec plus
-# host-side renormalization.
-_HITS_SPEC = PregelSpec(
-    message=lambda x, w: x * w,
-    combine="sum",
-    apply=lambda old, agg, ids, gval: agg,
-    identity=0.0,
-)
 
-_BURST = 2    # supersteps between host renormalizations (overflow-safe)
+# bounded: a rolling catalog of snapshot sizes must not accrete specs
+# (and, transitively, distinct jit-cache keys) without limit
+@lru_cache(maxsize=64)
+def _hits_spec(n_vertices: int, tol: float) -> PregelSpec:
+    """One simultaneous (hub, authority) update with in-loop per-half
+    L2 normalization; converged when no score moved by ``tol``."""
+    V = n_vertices
+
+    def global_value(agg, ids, valid):
+        # squared L2 norm of each half of the *new* aggregate
+        sq = jnp.where(valid, agg * agg, 0.0)
+        is_hub = ids < V
+        return jnp.stack([jnp.sum(jnp.where(is_hub, sq, 0.0)),
+                          jnp.sum(jnp.where(is_hub, 0.0, sq))])
+
+    def apply(old, agg, ids, gval):
+        hub_norm = jnp.maximum(jnp.sqrt(gval[0]), 1e-12)
+        auth_norm = jnp.maximum(jnp.sqrt(gval[1]), 1e-12)
+        return jnp.where(ids < V, agg / hub_norm, agg / auth_norm)
+
+    def halt(old, new, valid):
+        return jnp.all(jnp.where(valid, jnp.abs(new - old), 0.0) < tol)
+
+    return PregelSpec(
+        message=lambda x, w: x * w,
+        combine="sum",
+        apply=apply,
+        identity=0.0,
+        halt=halt,
+        global_value=global_value,
+        global_over_agg=True,
+    )
 
 
 def role_graph(g: G.GraphCOO) -> G.GraphCOO:
@@ -65,10 +91,6 @@ def role_graph(g: G.GraphCOO) -> G.GraphCOO:
         2 * V, w=np.concatenate([w, w]), dedup=False)
 
 
-def _unit(x: jnp.ndarray) -> jnp.ndarray:
-    return x / jnp.maximum(jnp.linalg.norm(x), 1e-12)
-
-
 def hits(
     g: G.GraphCOO,
     max_iters: int = 50,
@@ -80,34 +102,23 @@ def hits(
 ):
     """Returns ``({'hubs': [V], 'authorities': [V]}, iterations)`` with
     each score vector L2-normalized (all-zero when the graph has no
-    edges feeding that role)."""
+    edges feeding that role).  The whole iteration — including the
+    per-half renormalization and the ``tol`` convergence test — is one
+    ``run_pregel`` call, i.e. one XLA program."""
     V = g.n_vertices
     if sharded is None:
         sharded = partition(role_graph(g), n_data, n_model)
-    state = jnp.zeros(sharded.n_pad, jnp.float32).at[: 2 * V].set(
+    init = jnp.zeros(sharded.n_pad, jnp.float32).at[: 2 * V].set(
         1.0 / np.sqrt(max(V, 1)))
-    hub = auth = None
-    iters = 0
-    while iters < max_iters:
-        k = min(_BURST, max_iters - iters)
-        state, _ = run_pregel(_HITS_SPEC, sharded, state, k, mesh=mesh)
-        iters += k
-        new_hub, new_auth = _unit(state[:V]), _unit(state[V: 2 * V])
-        if hub is not None and \
-                float(jnp.max(jnp.abs(new_hub - hub))) < tol and \
-                float(jnp.max(jnp.abs(new_auth - auth))) < tol:
-            hub, auth = new_hub, new_auth
-            break
-        hub, auth = new_hub, new_auth
-        state = jnp.zeros_like(state).at[: 2 * V].set(
-            jnp.concatenate([hub, auth]))
-    return {"hubs": hub, "authorities": auth}, iters
+    state, iters = run_pregel(_hits_spec(V, float(tol)), sharded, init,
+                              max_iters, mesh=mesh)
+    return {"hubs": state[:V], "authorities": state[V: 2 * V]}, int(iters)
 
 
 def hits_reference(src, dst, n_vertices: int, max_iters: int = 50,
                    tol: float = 1e-6):
     """Numpy oracle mirroring the device schedule exactly (simultaneous
-    updates, renormalization every ``_BURST`` steps)."""
+    updates, per-superstep renormalization, per-superstep tol check)."""
     V = n_vertices
     a_mat = np.zeros((V, V))
     a_mat[np.asarray(src), np.asarray(dst)] = 1.0
@@ -117,18 +128,15 @@ def hits_reference(src, dst, n_vertices: int, max_iters: int = 50,
 
     h = np.full(V, 1.0 / np.sqrt(max(V, 1)))
     a = np.full(V, 1.0 / np.sqrt(max(V, 1)))
-    prev = None
     iters = 0
     while iters < max_iters:
-        for _ in range(min(_BURST, max_iters - iters)):
-            h, a = a_mat @ a, a_mat.T @ h
-            iters += 1
-        h, a = unit(h), unit(a)
-        if prev is not None and \
-                np.max(np.abs(h - prev[0])) < tol and \
-                np.max(np.abs(a - prev[1])) < tol:
+        nh, na = unit(a_mat @ a), unit(a_mat.T @ h)
+        iters += 1
+        converged = (np.max(np.abs(nh - h), initial=0.0) < tol
+                     and np.max(np.abs(na - a), initial=0.0) < tol)
+        h, a = nh, na
+        if converged:
             break
-        prev = (h, a)
     return {"hubs": h.astype(np.float32),
             "authorities": a.astype(np.float32)}, iters
 

@@ -52,6 +52,25 @@ def _engine_run(eng, u, v):
                               jnp.asarray(v, jnp.int32)), None
 
 
+def _batch_run(eng, params_list):
+    """Fused batch path: K pair-batches concatenated into one gather +
+    intersection kernel call, slices scattered back per query.  Each
+    row's arithmetic is independent, so every slice is bit-identical to
+    running its query alone."""
+    u_all = np.concatenate(
+        [np.asarray(p["u"], np.int64) for p in params_list])
+    v_all = np.concatenate(
+        [np.asarray(p["v"], np.int64) for p in params_list])
+    sims = jaccard_similarity(eng.ell, jnp.asarray(u_all, jnp.int32),
+                              jnp.asarray(v_all, jnp.int32))
+    values, off = [], 0
+    for p in params_list:
+        n = len(p["u"])
+        values.append(sims[off: off + n])
+        off += n
+    return values, None, {"pregel_calls": 0, "kernel_calls": 1}
+
+
 def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
     rows = len(params.get("u") or (1,))
     return P.QuerySpec("jaccard", rows, iterations=1, row_bytes=4)
@@ -65,6 +84,8 @@ R.register(R.AlgorithmDef(
         R.Param("v", R.REQUIRED, normalize=_vertex_batch),
     ),
     cost=_cost,
+    batch_runner=_batch_run,
+    fuse=lambda params: (),      # any two pair-batches may share a call
     # the batched ELL-row intersection is an interactive single-device
     # workload — the capability flag keeps the planner honest about it
     engines=("local",),

@@ -27,7 +27,8 @@ from repro.core import graph as G
 from repro.core import planner as P
 from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
-from repro.core.pregel import PregelSpec, converged_halt, run_pregel
+from repro.core.pregel import (PregelSpec, batched_spec, converged_halt,
+                               run_pregel)
 
 
 def _relax_apply(dist, agg, ids, gval):
@@ -132,6 +133,42 @@ def _sources_tuple(s):
     return tuple(int(x) for x in np.atleast_1d(np.asarray(s)))
 
 
+# Fused batch runners: K relaxations with different sources are one
+# pregel program over [V, K] state (batched_spec lifts the scalar spec
+# onto a trailing batch axis).  The min monoid is exact per column, so
+# column k is bit-identical to running query k alone — the service's
+# fusion contract.  Queries fuse only within an equal max_iters group
+# (the fuse key), so the shared loop bound is every ticket's own.
+
+def _relax_batch(spec, eng, source_sets, max_iters):
+    V = eng.coo.n_vertices
+    mi = max_iters if max_iters is not None else V
+    init = np.full((eng.sharded.n_pad, len(source_sets)), np.inf,
+                   dtype=np.float32)
+    for b, sources in enumerate(source_sets):
+        init[np.asarray(sources, dtype=np.int64), b] = 0.0
+    dist, iters = run_pregel(batched_spec(spec), eng.sharded,
+                             jnp.asarray(init), mi, mesh=eng.mesh)
+    values = [dist[:V, b] for b in range(len(source_sets))]
+    return values, int(iters), {"pregel_calls": 1}
+
+
+def _bfs_batch(eng, params_list):
+    return _relax_batch(_BFS_SPEC, eng,
+                        [p["sources"] for p in params_list],
+                        params_list[0]["max_iters"])
+
+
+def _sssp_batch(eng, params_list):
+    return _relax_batch(_SSSP_SPEC, eng,
+                        [(p["source"],) for p in params_list],
+                        params_list[0]["max_iters"])
+
+
+def _relax_fuse_key(params):
+    return ("max_iters", params["max_iters"])
+
+
 def _bfs_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
     # small-world graphs: effective diameter ~ a dozen supersteps
     iters = min(12, params.get("max_iters") or 12)
@@ -157,6 +194,8 @@ R.register(R.AlgorithmDef(
     count=reachable_count,
     count_method="reachable_count",
     cost=_bfs_cost,
+    batch_runner=_bfs_batch,
+    fuse=_relax_fuse_key,
     example_params={"sources": (0,)},
     doc="Hop distances from a source set along directed edges.",
 ))
@@ -170,6 +209,8 @@ R.register(R.AlgorithmDef(
         R.Param("max_iters", None, check=lambda n: n >= 1, normalize=int),
     ),
     cost=_sssp_cost,
+    batch_runner=_sssp_batch,
+    fuse=_relax_fuse_key,
     example_params={"source": 0},
     doc="Single-source weighted shortest paths (non-negative weights).",
 ))

@@ -233,8 +233,13 @@ def _tri_cost(g: P.GraphStats, params: dict, count_only: bool):
     # intersect: one pass over the oriented edges; resident state is the
     # sorted out-neighbor rows (~4*d_max B/vertex), per-edge work is the
     # K x K lane-compare (charged as compute-equivalent bytes — the
-    # merge is VPU-bound, not bandwidth-bound, once rows fit VMEM tiles)
-    d_hat = oriented_degree_estimate(g.n_vertices, g.n_edges)
+    # merge is VPU-bound, not bandwidth-bound, once rows fit VMEM tiles).
+    # Once an engine has built the OrientedELL its *measured* row width
+    # flows back through GraphStats and replaces the analytic estimate.
+    if g.oriented_width is not None:
+        d_hat = max(float(g.oriented_width), 1.0)
+    else:
+        d_hat = oriented_degree_estimate(g.n_vertices, g.n_edges)
     intersect = P.QuerySpec("triangle_count", 1, iterations=1,
                             state_bytes_per_vertex=4.0 * d_hat,
                             edge_bytes_factor=max(d_hat * d_hat / 12.0, 1.0),

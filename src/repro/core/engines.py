@@ -64,6 +64,9 @@ class Engine:
         # (PageRank's normalized partition, HITS' doubled-graph shards).
         self.cache: dict = {}
         self.n_runs = 0               # executed queries (cache-hit probe)
+        # Measured structure observed while building derived state,
+        # fed back into GraphStats by the service/platform layer.
+        self._measured: dict = {}
 
     # -- cached graph state -------------------------------------------------
     @property
@@ -82,6 +85,11 @@ class Engine:
             src = np.asarray(coo.src)[: coo.n_edges]
             dst = np.asarray(coo.dst)[: coo.n_edges]
             w = np.asarray(coo.w)[: coo.n_edges]
+            if coo.n_edges:
+                # the true (uncapped) max in-degree falls out of the ELL
+                # build for free — record it for the planner's stats
+                self._measured["max_degree"] = int(
+                    np.bincount(dst, minlength=coo.n_vertices).max())
             self._ell = G.build_ell(src, dst, coo.n_vertices,
                                     self.max_degree, w=w, direction="in")
         return self._ell
@@ -97,7 +105,15 @@ class Engine:
             src = np.asarray(coo.src)[: coo.n_edges]
             dst = np.asarray(coo.dst)[: coo.n_edges]
             self._oriented = G.build_oriented_ell(src, dst, coo.n_vertices)
+            self._measured["oriented_width"] = self._oriented.max_out_degree
         return self._oriented
+
+    def measurements(self) -> dict:
+        """Measured graph structure observed so far (only fields whose
+        derived state this engine has actually built) — the feedback
+        path that replaces the planner's analytic stand-ins, e.g. the
+        triangle cost hook's d_max estimate, with ground truth."""
+        return dict(self._measured)
 
     # -- generic execution --------------------------------------------------
     def run(self, algorithm, params: Optional[dict] = None,
@@ -132,13 +148,56 @@ class Engine:
         meta = {"variant": variant} if variant is not None else {}
         return QueryResult(value, self.name, iters, meta)
 
+    def run_batch(self, algorithm, params_list,
+                  count_only=None) -> list:
+        """Execute K compatible queries of one algorithm as a single
+        fused program (the service's batch-packing path, NScale-style).
+
+        The caller guarantees compatibility — same algorithm, same graph
+        (this engine's), equal ``fuse`` keys.  Returns one
+        ``QueryResult`` per entry of ``params_list``, in order; each
+        value is bit-identical to ``run`` on the same params alone.
+        ``count_only`` is per-query: fused tickets that only want the
+        count get the registered reducer applied to their slice.
+        """
+        defn = R.get(algorithm) if isinstance(algorithm, str) else algorithm
+        if defn.batch_runner is None:
+            raise ValueError(f"{defn.name!r} has no batch runner")
+        if self.name not in defn.engines:
+            raise ValueError(
+                f"{defn.name!r} supports engine(s) {defn.engines}, "
+                f"not {self.name!r}")
+        co = list(count_only) if count_only is not None \
+            else [False] * len(params_list)
+        if len(co) != len(params_list):
+            raise ValueError("count_only length mismatch")
+        ps = [defn.validate(p) for p in params_list]
+        if defn.requires_symmetric:
+            G.require_symmetric(self.coo, defn.name)
+        self.n_runs += 1
+        values, iters, fused_meta = defn.batch_runner(self, ps)
+        if len(values) != len(ps):
+            raise ValueError(
+                f"{defn.name}: batch runner returned {len(values)} values "
+                f"for {len(ps)} queries")
+        iters = int(iters) if iters is not None else None
+        out = []
+        for i, (value, c) in enumerate(zip(values, co)):
+            if c and defn.count is not None:
+                value = defn.count(value)
+            meta = {"fused": {"batch_size": len(ps), "index": i,
+                              **(fused_meta or {})}}
+            out.append(QueryResult(value, self.name, iters, meta))
+        return out
+
     def _select_variant(self, defn: R.AlgorithmDef, params: dict,
                         count_only: bool) -> Optional[str]:
         """Cheapest feasible variant for this engine's graph (the same
-        cost hook the planner consults, restricted to this engine)."""
+        cost hook the planner consults, restricted to this engine,
+        including any structure this engine has already measured)."""
         if defn.cost is None:
             return None
-        stats = P.GraphStats.of(self.coo)
+        stats = P.GraphStats.of(self.coo).with_measurements(self._measured)
         specs = defn.cost(stats, params, count_only)
         if isinstance(specs, P.QuerySpec):
             return specs.variant

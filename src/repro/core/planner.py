@@ -16,15 +16,30 @@ collective volume for the distributed engine, host egress for outputs)
 whose constants are calibrated by ``benchmarks/fig5_engine_crossover.py``.
 The model intentionally has few terms — it must be explainable to the
 user in the query plan, like the paper's rule of thumb was.
+
+Two feedback loops replace analytic guesses with measurements:
+
+* ``GraphStats`` carries optional *measured* fields (observed max
+  in-degree, the built ``OrientedELL`` row width) that engines feed back
+  from derived state they have already paid to build — cost hooks prefer
+  them over their analytic stand-ins.
+* The model constants live in a :class:`CalibrationProfile` that
+  ``benchmarks/algo_suite.py --emit-calibration`` writes from wall-clock
+  measurements and :func:`load_calibration` applies process-wide —
+  including the service tier thresholds (interactive-vs-batch
+  classification and the admission budget).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import json
+from typing import Mapping, Optional, Sequence
 
 from repro.core import registry
 
-# TPU v5e-flavored constants (per chip), overridable for calibration.
+# TPU v5e-flavored constants (per chip) — the analytic defaults that seed
+# CalibrationProfile; estimates read the *active profile*, so
+# load_calibration overrides these without touching module globals.
 HBM_BW = 819e9            # B/s
 LINK_BW = 50e9            # B/s per ICI link
 HOST_EGRESS_BW = 4e9      # B/s device->host for result materialization
@@ -35,13 +50,121 @@ LOCAL_MEM_BUDGET = 12e9   # usable HBM for the local engine's graph
 
 @dataclasses.dataclass(frozen=True)
 class GraphStats:
+    """Static graph shape plus optional *measured* structure.
+
+    ``max_degree`` (observed max in-degree) and ``oriented_width`` (the
+    built ``OrientedELL`` row width) default to ``None`` — unknown until
+    an engine has built the corresponding derived state and fed it back
+    (``Engine.measurements``).  Cost hooks fall back to analytic
+    estimates when a field is ``None``.
+    """
+
     n_vertices: int
     n_edges: int
     bytes_coo: int
+    max_degree: Optional[int] = None
+    oriented_width: Optional[int] = None
 
     @classmethod
     def of(cls, graph) -> "GraphStats":
         return cls(graph.n_vertices, graph.n_edges, graph.nbytes())
+
+    def with_measurements(self, meas: Mapping[str, int]) -> "GraphStats":
+        """Stats with measured fields merged in (unknown keys rejected,
+        ``None`` values ignored)."""
+        fields = {"max_degree", "oriented_width"}
+        unknown = sorted(set(meas) - fields)
+        if unknown:
+            raise ValueError(f"unknown measurement(s) {unknown}")
+        updates = {k: int(v) for k, v in meas.items() if v is not None}
+        return dataclasses.replace(self, **updates) if updates else self
+
+
+# ---------------------------------------------------------------------------
+# Calibration profile — the model constants as loadable data
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationProfile:
+    """Every constant the cost model and the service tiering consume.
+
+    ``algo_time_scale`` maps an algorithm name to a measured/modeled
+    wall-clock ratio: ``benchmarks/algo_suite.py --emit-calibration``
+    fits one multiplier per algorithm from its timing sweep, so the
+    planner's relative estimates are anchored to real executions instead
+    of the analytic bandwidth terms alone.  ``interactive_threshold_s``
+    and ``admission_budget_s`` are the service tier thresholds
+    (interactive tickets bypass the batch queue; queries estimated above
+    the budget are rejected at submit with the plan attached).
+    """
+
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    host_egress_bw: float = HOST_EGRESS_BW
+    local_dispatch_s: float = LOCAL_DISPATCH_S
+    dist_step_s: float = DIST_STEP_S
+    local_mem_budget: float = LOCAL_MEM_BUDGET
+    interactive_threshold_s: float = 0.05
+    admission_budget_s: float = float("inf")
+    algo_time_scale: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
+    source: str = "analytic-defaults"
+
+    def scale(self, algorithm: str) -> float:
+        return float(self.algo_time_scale.get(algorithm, 1.0))
+
+    def to_json(self, path) -> None:
+        d = dataclasses.asdict(self)
+        d["algo_time_scale"] = dict(self.algo_time_scale)
+        if d["admission_budget_s"] == float("inf"):
+            d["admission_budget_s"] = None        # JSON has no inf
+        with open(path, "w") as f:
+            json.dump(d, f, indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, path) -> "CalibrationProfile":
+        with open(path) as f:
+            d = json.load(f)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"calibration profile {path}: unknown "
+                             f"field(s) {unknown}")
+        if d.get("admission_budget_s") is None:
+            d["admission_budget_s"] = float("inf")
+        d["algo_time_scale"] = {
+            str(k): float(v)
+            for k, v in (d.get("algo_time_scale") or {}).items()}
+        return cls(**d)
+
+
+_ACTIVE_PROFILE = CalibrationProfile()
+_PROFILE_GENERATION = 0    # bumped on every swap; plan caches key on it
+
+
+def active_calibration() -> CalibrationProfile:
+    return _ACTIVE_PROFILE
+
+
+def calibration_generation() -> int:
+    """Monotone counter of profile swaps — cached plans costed under an
+    older generation are stale and must be re-costed."""
+    return _PROFILE_GENERATION
+
+
+def set_calibration(profile: Optional[CalibrationProfile]) \
+        -> CalibrationProfile:
+    """Install ``profile`` process-wide (``None`` restores the analytic
+    defaults).  Returns the now-active profile."""
+    global _ACTIVE_PROFILE, _PROFILE_GENERATION
+    _ACTIVE_PROFILE = profile if profile is not None else CalibrationProfile()
+    _PROFILE_GENERATION += 1
+    return _ACTIVE_PROFILE
+
+
+def load_calibration(path) -> CalibrationProfile:
+    """Load a ``--emit-calibration`` profile and make it active."""
+    return set_calibration(CalibrationProfile.from_json(path))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,33 +204,47 @@ class Plan:
     variant: Optional[str] = None  # chosen execution variant, if any
 
 
-def estimate_local_cost(g: GraphStats, q: QuerySpec) -> float:
+def estimate_local_cost(g: GraphStats, q: QuerySpec,
+                        profile: Optional[CalibrationProfile] = None) -> float:
     """One device streams the edge set from HBM each superstep, then
     egresses the output to the host once."""
-    if g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices > LOCAL_MEM_BUDGET:
+    pr = profile or _ACTIVE_PROFILE
+    if g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices \
+            > pr.local_mem_budget:
         return float("inf")
     touched = (g.bytes_coo * q.edge_bytes_factor
                + q.state_bytes_per_vertex * g.n_vertices) * q.iterations
-    return (LOCAL_DISPATCH_S
-            + touched / HBM_BW
-            + q.output_rows * q.row_bytes / HOST_EGRESS_BW)
+    return pr.scale(q.algorithm) * (
+        pr.local_dispatch_s
+        + touched / pr.hbm_bw
+        + q.output_rows * q.row_bytes / pr.host_egress_bw)
 
 
 def estimate_dist_cost(g: GraphStats, q: QuerySpec, n_chips: int,
-                       vertex_replicated: bool = True) -> float:
+                       vertex_replicated: bool = True,
+                       profile: Optional[CalibrationProfile] = None) -> float:
     """Each chip streams E/P edges; every superstep pays a launch/sync and
     a ring all-reduce of the vertex aggregate; output egress parallelizes
     over hosts."""
+    pr = profile or _ACTIVE_PROFILE
     n_chips = max(n_chips, 1)
     touched = (g.bytes_coo * q.edge_bytes_factor / n_chips
                + q.state_bytes_per_vertex * g.n_vertices) * q.iterations
     coll = 0.0
     if vertex_replicated and n_chips > 1:
         ring = 2.0 * (n_chips - 1) / n_chips
-        coll = (q.state_bytes_per_vertex * g.n_vertices * ring / LINK_BW) \
+        coll = (q.state_bytes_per_vertex * g.n_vertices * ring / pr.link_bw) \
             * q.iterations
-    egress = q.output_rows * q.row_bytes / (HOST_EGRESS_BW * max(n_chips // 4, 1))
-    return DIST_STEP_S * q.iterations + touched / HBM_BW + coll + egress
+    egress = q.output_rows * q.row_bytes / (
+        pr.host_egress_bw * max(n_chips // 4, 1))
+    return pr.scale(q.algorithm) * (
+        pr.dist_step_s * q.iterations + touched / pr.hbm_bw + coll + egress)
+
+
+def plan_cost(plan: Plan) -> float:
+    """The estimate for the plan's *chosen* engine — what the service's
+    admission/tier classification keys on."""
+    return plan.est_local_s if plan.engine == "local" else plan.est_dist_s
 
 
 def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:

@@ -22,6 +22,7 @@ magnitude faster than a dataflow engine that materializes every round.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import OrderedDict
 from typing import Callable, Optional
 
@@ -58,10 +59,16 @@ class PregelSpec:
               vertices with no incoming message)
     halt    : optional (old, new, valid[Vl]) -> bool array (per-shard
               "locally converged"); None runs exactly ``max_iters``.
-    global_value : optional (state[Vl], ids, valid) -> scalar partial;
-              summed across vertex shards and fed to ``apply`` as ``gval``
-              (PageRank uses this for the dangling-mass redistribution —
-              the one pattern a pure message-passing model can't express).
+    global_value : optional (state[Vl], ids, valid) -> scalar (or small
+              array) partial; summed across vertex shards and fed to
+              ``apply`` as ``gval`` (PageRank uses this for the
+              dangling-mass redistribution — the one pattern a pure
+              message-passing model can't express).
+    global_over_agg : compute ``global_value`` over the *new* combined
+              aggregate instead of the pre-superstep state — the hook a
+              same-superstep normalization needs (HITS divides the fresh
+              hub/authority sums by their own L2 norms inside the loop,
+              making the whole algorithm one XLA program).
 
     Vertex state may be 1-D ``[Vl]`` or N-D ``[Vl, ...]`` (triangle
     counting keeps a packed neighborhood bitset per vertex); padding-slot
@@ -75,6 +82,7 @@ class PregelSpec:
     halt: Optional[Callable[[Array, Array, Array], Array]] = None
     global_value: Optional[Callable[[Array, Array, Array], Array]] = None
     needs_dst_state: bool = False
+    global_over_agg: bool = False
 
 
 def converged_halt(old, new, valid):
@@ -82,6 +90,60 @@ def converged_halt(old, new, valid):
     Shared by every to-convergence vertex program (CC, traversal, LPA,
     k-core peeling)."""
     return jnp.logical_not(jnp.any(jnp.logical_and(valid, new != old)))
+
+
+@functools.lru_cache(maxsize=64)
+def batched_spec(spec: PregelSpec) -> PregelSpec:
+    """Lift a scalar vertex program onto a trailing batch axis.
+
+    The returned spec runs K independent instances of ``spec`` as *one*
+    program over state ``[Vl, K]`` — the fused-batch substrate of the
+    service layer (K BFS frontiers with different sources share every
+    gather, segment-combine and collective of every superstep).  Each
+    column's arithmetic is the unbatched program's, element for element
+    (vmap only widens the ops), and the monoid combines are exact
+    per-column, so column ``k`` of the fused result is bit-identical to
+    running instance ``k`` alone.  The fused ``halt`` is the AND over
+    columns; converged columns sit at their fixpoint (apply is a no-op
+    there) while stragglers finish.
+
+    Memoized (bounded) so repeated fusions of the same program hit the
+    jit cache.  Structured (grouped-monoid) messages split columns
+    positionally and cannot carry a trailing batch axis — rejected up
+    front.
+    """
+    if isinstance(spec.combine, tuple):
+        raise ValueError(
+            "batched_spec: structured (grouped-monoid) messages cannot "
+            "be lifted onto a batch axis")
+    msg_axes = (-1, None, -1) if spec.needs_dst_state else (-1, None)
+    message = jax.vmap(spec.message, in_axes=msg_axes, out_axes=-1)
+    # with a global_value the per-column scalars arrive as a trailing-K
+    # vector and each column's apply reads its own entry
+    gval_axis = None if spec.global_value is None else -1
+    apply_ = jax.vmap(spec.apply, in_axes=(-1, -1, None, gval_axis),
+                      out_axes=-1)
+
+    halt = None
+    if spec.halt is not None:
+        per_col = jax.vmap(spec.halt, in_axes=(-1, -1, None))
+
+        def halt(old, new, valid):
+            return jnp.all(per_col(old, new, valid))
+
+    gval = None
+    if spec.global_value is not None:
+        per_col_g = jax.vmap(spec.global_value, in_axes=(-1, None, None),
+                             out_axes=-1)
+
+        def gval(state, ids, valid):
+            return per_col_g(state, ids, valid)
+
+    return PregelSpec(
+        message=message, combine=spec.combine, apply=apply_,
+        identity=spec.identity, halt=halt, global_value=gval,
+        needs_dst_state=spec.needs_dst_state,
+        global_over_agg=spec.global_over_agg)
 
 
 _SEG = {
@@ -223,7 +285,8 @@ def run_pregel(
             if dist:
                 agg = _shard_combine(agg, spec.combine, axis_data)
             if spec.global_value is not None:
-                gval = spec.global_value(state, ids, valid)
+                g_src = agg if spec.global_over_agg else state
+                gval = spec.global_value(g_src, ids, valid)
                 if sharded and dist:
                     gval = lax.psum(gval, axis_model)
             else:

@@ -16,17 +16,25 @@ thin wrappers over the generic, schema-validated constructor
 
 so a newly registered algorithm is queryable with zero edits here.
 
-``GraphPlatform`` keeps two LRU caches for the paper's interactive query
-class ("<2 s count vs ~10 min table"): a *plan* cache (cost model +
-routing per distinct query shape) and a *result* cache keyed on
-``(graph content digest, algorithm, frozen params, count_only,
-engine)`` — a repeated identical query on a resident graph returns the
-cached result without re-tracing or re-running anything.  Keying on the
-content digest (not ``id()``, which CPython recycles the moment a graph
-is garbage-collected) makes the cache sound across graph lifetimes and
+``GraphPlatform`` is a thin per-graph facade over the service layer
+(``repro.core.service``): one ``GraphAnalyticsService`` with a
+single-entry catalog.  The service owns the plan cache (cost model +
+routing per distinct query shape) and the *result* cache keyed on
+``(graph content digest, algorithm, frozen params, count_only)`` — a
+repeated identical query on a resident graph returns the cached result
+without re-tracing or re-running anything.  Keying on the content
+digest (not ``id()``, which CPython recycles the moment a graph is
+garbage-collected) makes the cache sound across graph lifetimes and
 lets byte-identical reloaded snapshots share entries: pass one mapping
 as ``result_cache`` to several platforms and a query answered for a
 graph is a hit for every later platform built over the same bytes.
+The engine is deliberately *not* in the key — results are
+contractually engine-independent, so a re-plan onto the other engine
+(``force_engine`` toggled, chip count changed) still hits.
+
+Multi-graph catalogs, admission tiers and fused batch execution live
+one level up: build a ``GraphAnalyticsService`` directly and ``submit``
+queries for tickets instead of calling ``query`` synchronously.
 """
 from __future__ import annotations
 
@@ -35,9 +43,9 @@ from collections import OrderedDict
 from typing import Optional
 
 from repro.core import graph as G
-from repro.core import planner as P
 from repro.core import registry as R
 from repro.core.engines import LocalEngine, DistributedEngine, QueryResult
+from repro.core.service import GraphAnalyticsService
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,8 +127,11 @@ class GraphQuery:
 
 
 class GraphPlatform:
-    """Owns both engines; routes each query through the planner and
-    serves repeats from the result cache."""
+    """Per-graph facade over :class:`GraphAnalyticsService`: one graph,
+    both engines, synchronous queries routed through the planner and
+    served from the service's shared result cache."""
+
+    GRAPH = "default"
 
     def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
                  n_model: int = 1, local_max_degree: int = 128,
@@ -128,112 +139,62 @@ class GraphPlatform:
                  result_cache: Optional[OrderedDict] = None):
         self.coo = coo
         self.mesh = mesh
-        self.stats = P.GraphStats.of(coo)
-        self.force_engine = force_engine
-        self._local: Optional[LocalEngine] = None
-        self._dist: Optional[DistributedEngine] = None
-        self._local_max_degree = local_max_degree
-        self._n_data, self._n_model = n_data, n_model
-        if mesh is not None:
-            self.n_chips = 1
-            for s in mesh.devices.shape:
-                self.n_chips *= s
-        else:
-            self.n_chips = max(n_data * n_model, 1)
-        self.cache_size = cache_size
-        self._plan_cache: OrderedDict = OrderedDict()
-        # result entries are keyed on the graph's *content digest*, so a
-        # caller-supplied mapping may be shared across platforms (the
-        # reloaded-snapshot case) without ever serving a stale result
-        self._result_cache: OrderedDict = (
-            OrderedDict() if result_cache is None else result_cache)
-        self.cache_stats = {"hits": 0, "misses": 0}
+        # a caller-supplied result_cache mapping may be shared across
+        # platforms (the reloaded-snapshot case); entries are keyed on
+        # content digests so sharing can never serve a stale result
+        self.service = GraphAnalyticsService(cache_size=cache_size,
+                                             result_cache=result_cache)
+        self._ctx = self.service.add_graph(
+            self.GRAPH, coo, mesh=mesh, n_data=n_data, n_model=n_model,
+            local_max_degree=local_max_degree, force_engine=force_engine)
 
-    # lazy engine construction: building ELL/partitions is ETL work we
-    # only pay when the planner actually routes there.
+    # -- service-layer delegates -------------------------------------------
+    @property
+    def stats(self):
+        return self._ctx.current_stats()
+
+    @property
+    def force_engine(self) -> Optional[str]:
+        return self._ctx.force_engine
+
+    @property
+    def n_chips(self) -> int:
+        return self._ctx.n_chips
+
+    @property
+    def cache_size(self) -> int:
+        return self.service.cache_size
+
+    @property
+    def cache_stats(self) -> dict:
+        return self.service.cache_stats
+
     @property
     def local(self) -> LocalEngine:
-        if self._local is None:
-            self._local = LocalEngine(self.coo, self._local_max_degree)
-        return self._local
+        return self._ctx.local
 
     @property
     def distributed(self) -> DistributedEngine:
-        if self._dist is None:
-            self._dist = DistributedEngine(self.coo, mesh=self.mesh,
-                                           n_data=self._n_data,
-                                           n_model=self._n_model)
-        return self._dist
+        return self._ctx.distributed
 
-    @staticmethod
-    def _lru_get(cache: OrderedDict, key):
-        if key is None or key not in cache:
-            return None
-        cache.move_to_end(key)
-        return cache[key]
+    # engine memos are service-context state now, but tests and callers
+    # probe them to check lazy construction — keep the names working
+    @property
+    def _local(self) -> Optional[LocalEngine]:
+        return self._ctx._local
 
-    def _lru_put(self, cache: OrderedDict, key, value) -> None:
-        if key is None or not self.cache_size:
-            return
-        cache[key] = value
-        while len(cache) > self.cache_size:
-            cache.popitem(last=False)
+    @property
+    def _dist(self) -> Optional[DistributedEngine]:
+        return self._ctx._dist
 
-    @staticmethod
-    def _query_key(q: GraphQuery):
-        try:
-            key = q.key()
-            hash(key)           # force the check: freeze() may pass
-            return key          # exotic values through unhashed
-        except TypeError:       # unhashable parameter value: skip caching
-            return None
+    @property
+    def _result_cache(self) -> OrderedDict:
+        return self.service._result_cache
 
-    def plan(self, q: GraphQuery) -> P.Plan:
+    def plan(self, q: GraphQuery):
         """Cost every (engine, variant) pair and pick one (cached per
         query shape)."""
-        key = self._query_key(q)
-        cached = self._lru_get(self._plan_cache, key)
-        if cached is not None:
-            return cached
-        defn = R.get(q.algorithm)
-        specs = P.specs_for(q.algorithm, self.stats, count_only=q.count_only,
-                            **q.params)
-        plan = P.choose_plan(self.stats, specs, self.n_chips)
-        chosen_engine = plan.engine
-        if self.force_engine:
-            plan = dataclasses.replace(plan, engine=self.force_engine,
-                                       reason=f"forced: {self.force_engine}")
-        if plan.engine not in defn.engines:
-            # capability clamp wins over both the cost model and forcing
-            plan = dataclasses.replace(
-                plan, engine=defn.engines[0],
-                reason=f"{q.algorithm} runs on {'/'.join(defn.engines)} "
-                       f"only")
-        if len(specs) > 1 and plan.engine != chosen_engine:
-            # engine was overridden: re-pick the cheapest variant for it
-            best = P.best_spec_for_engine(self.stats, specs, plan.engine,
-                                          self.n_chips)
-            plan = dataclasses.replace(plan, variant=best.variant)
-        self._lru_put(self._plan_cache, key, plan)
-        return plan
+        return self._ctx.plan(q)
 
     def query(self, q: GraphQuery) -> QueryResult:
-        plan = self.plan(q)
-        qkey = self._query_key(q)
-        # content digest, not id(): a recycled address must never alias
-        # a dead graph's results, and byte-identical reloads must share.
-        # The variant is deliberately absent — variants are contractually
-        # interchangeable, so either one's result answers the query.
-        key = None if qkey is None else \
-            (self.coo.content_digest(), plan.engine) + qkey
-        hit = self._lru_get(self._result_cache, key)
-        if hit is not None:
-            self.cache_stats["hits"] += 1
-            return dataclasses.replace(hit, meta={**hit.meta, "cache": "hit"})
-        self.cache_stats["misses"] += 1
-        eng = self.local if plan.engine == "local" else self.distributed
-        r = eng.run(q.algorithm, q.params, count_only=q.count_only,
-                    variant=plan.variant)
-        r.meta["plan"] = plan
-        self._lru_put(self._result_cache, key, r)
-        return r
+        return self.service.call(self.GRAPH, q)

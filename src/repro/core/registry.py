@@ -87,6 +87,20 @@ class AlgorithmDef:
               per (graph, engine) from the cost hook's QuerySpecs; an
               engine invoked without a plan resolves one the same way.
               ``run`` stays the fallback when no variant is selected.
+    batch_runner: optional *fused* executor
+              ``(engine, [params, ...]) -> (values, iterations, meta)``
+              that answers K compatible queries in ONE stacked/vmapped
+              execution (K BFS frontiers as one ``[V, K]`` pregel
+              program; K jaccard pair-batches as one kernel call) and
+              returns one value per query, scatter-ready.  Each value
+              must be bit-identical to running its query alone — the
+              service's fusion contract.
+    fuse    : compatibility key hook ``validated params -> hashable``;
+              two queries may share one ``batch_runner`` call iff they
+              target the same algorithm on the same graph and their fuse
+              keys are equal (BFS fuses across ``sources`` but never
+              across differing ``max_iters``).  ``None`` disables
+              fusion even when a ``batch_runner`` exists.
     engines : capability flags; which engines can execute the
               definition (``("local",)`` for ELL-batch workloads that
               are inherently single-device).
@@ -107,6 +121,8 @@ class AlgorithmDef:
     count_run: Optional[Callable[..., tuple]] = None
     cost: Optional[Callable[..., Any]] = None
     variants: Optional[Mapping[str, Any]] = None
+    batch_runner: Optional[Callable[..., tuple]] = None
+    fuse: Optional[Callable[[dict], Any]] = None
     engines: tuple[str, ...] = ("local", "distributed")
     requires_symmetric: bool = False
     method: Optional[str] = None
@@ -118,6 +134,12 @@ class AlgorithmDef:
     @property
     def has_count_path(self) -> bool:
         return self.count is not None or self.count_run is not None
+
+    @property
+    def fusable(self) -> bool:
+        """Whether the service scheduler may coalesce compatible queries
+        into one fused execution."""
+        return self.batch_runner is not None and self.fuse is not None
 
     def runner_for(self, variant: Optional[str]):
         """Resolve the runner for ``variant`` (None -> default ``run``)."""

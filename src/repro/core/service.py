@@ -1,0 +1,578 @@
+"""GraphAnalyticsService — the platform as a shared analytics service.
+
+The paper's system is not a one-query-at-a-time library: it fields many
+concurrent analytics queries over a catalog of graph snapshots, routing
+each across the interactive/batch divide (Sections III–IV; the companion
+SQL-serving paper makes the admission/routing layer explicit).  This
+module is that service tier:
+
+* **Catalog** — named graph snapshots, content-digest-deduplicated: two
+  names over byte-identical snapshots share one :class:`GraphContext`
+  (engines, derived state, plan cache), and every graph shares one
+  result cache keyed on content digests, so a query answered for any
+  snapshot is a hit for every byte-identical reload.
+* **Admission & tiers** — ``submit`` plans the query first, classifies
+  it *interactive* vs *batch* from the planner's cost estimate
+  (thresholds come from the active :class:`~repro.core.planner.
+  CalibrationProfile` unless overridden), and rejects over-budget
+  queries up front with the plan attached — the user sees *why* before
+  any engine burns a cycle.
+* **Deterministic FIFO scheduling** — tickets queue per (engine, tier);
+  ``drain`` runs each engine's interactive queue before its batch
+  queue, in submission order.  ``result(ticket)`` on an interactive
+  ticket executes it immediately, bypassing all queued batch work (the
+  paper's "<2 s count while the 10-min table job waits" property).
+* **Fused batch execution** — the NScale insight: many small per-source
+  computations over one graph should run as *one* shared execution.
+  The scheduler coalesces queued batch tickets with equal
+  ``(graph, algorithm, fuse-key)`` into a single
+  ``AlgorithmDef.batch_runner`` call — K BFS/SSSP frontiers as one
+  ``[V, K]`` pregel program, K jaccard pair-batches as one kernel
+  call — and scatters the per-ticket results (each bit-identical to a
+  solo run) back through the shared result cache.
+
+``GraphPlatform`` (``repro.core.query``) survives as a thin per-graph
+facade over these primitives: its synchronous ``query`` is
+:meth:`GraphAnalyticsService.call` on a one-entry catalog.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any, Optional
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import registry as R
+from repro.core.engines import DistributedEngine, LocalEngine, QueryResult
+
+
+class AdmissionRejected(Exception):
+    """Raised by ``submit`` when a query's estimated cost exceeds the
+    admission budget.  Carries the plan, so the caller sees the engine
+    choice and both estimates that sank the query."""
+
+    def __init__(self, graph_name: str, query, plan: P.Plan, est_s: float,
+                 budget_s: float):
+        self.graph_name = graph_name
+        self.query = query
+        self.plan = plan
+        self.est_s = est_s
+        self.budget_s = budget_s
+        super().__init__(
+            f"query {query.algorithm!r} on {graph_name!r} rejected: "
+            f"estimated {est_s:.3g}s exceeds the admission budget "
+            f"{budget_s:.3g}s ({plan.reason})")
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One admitted query: its plan, its tier, and its place in line.
+
+    The ticket pins the ``GraphContext`` it was planned against, so a
+    later ``add_graph`` rebinding the same catalog name (or a
+    ``remove_graph``) never redirects queued work onto a different
+    snapshot — the ticket executes against the bytes it was admitted
+    for.  ``fuse_key`` is computed once at submit (over validated
+    params); ``None`` means unfusable."""
+
+    ticket_id: int
+    graph_name: str
+    query: Any                    # GraphQuery (duck-typed to avoid cycle)
+    plan: P.Plan
+    tier: str                     # 'interactive' | 'batch'
+    est_s: float
+    status: str = "queued"        # 'queued' | 'done' | 'failed'
+    context: Any = dataclasses.field(default=None, repr=False)
+    fuse_key: Any = dataclasses.field(default=None, repr=False)
+    error: Optional[BaseException] = dataclasses.field(default=None,
+                                                       repr=False)
+
+
+class GraphContext:
+    """One graph snapshot's service primitives: lazy engines over shared
+    derived state, measured-stats feedback, and a per-shape plan cache.
+
+    This is the machinery ``GraphPlatform`` used to own inline; the
+    platform is now a facade over a single-entry catalog of these.
+    """
+
+    def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
+                 n_model: int = 1, local_max_degree: int = 128,
+                 force_engine: Optional[str] = None,
+                 plan_cache_size: int = 128):
+        self.coo = coo
+        self.mesh = mesh
+        self.force_engine = force_engine
+        self._base_stats = P.GraphStats.of(coo)
+        self.stats = self._base_stats
+        self._local: Optional[LocalEngine] = None
+        self._dist: Optional[DistributedEngine] = None
+        self._local_max_degree = local_max_degree
+        self._n_data, self._n_model = n_data, n_model
+        if mesh is not None:
+            self.n_chips = 1
+            for s in mesh.devices.shape:
+                self.n_chips *= s
+        else:
+            self.n_chips = max(n_data * n_model, 1)
+        self._plan_cache_size = plan_cache_size
+        self._plan_cache: OrderedDict = OrderedDict()
+        self._applied_measurements: dict = {}
+        self._profile_generation = P.calibration_generation()
+
+    def config_key(self) -> tuple:
+        """What must match for two catalog entries to share this context."""
+        return (id(self.mesh), self._n_data, self._n_model,
+                self._local_max_degree, self.force_engine)
+
+    # lazy engine construction: building ELL/partitions is ETL work we
+    # only pay when the planner actually routes there.
+    @property
+    def local(self) -> LocalEngine:
+        if self._local is None:
+            self._local = LocalEngine(self.coo, self._local_max_degree)
+        return self._local
+
+    @property
+    def distributed(self) -> DistributedEngine:
+        if self._dist is None:
+            self._dist = DistributedEngine(self.coo, mesh=self.mesh,
+                                           n_data=self._n_data,
+                                           n_model=self._n_model)
+        return self._dist
+
+    def engine(self, name: str):
+        return self.local if name == "local" else self.distributed
+
+    def current_stats(self) -> P.GraphStats:
+        """Stats with every measurement the engines have fed back so far
+        (observed max in-degree, built ``OrientedELL`` width).  A change
+        invalidates the plan cache, and so does a calibration-profile
+        swap: cached plans were costed on constants (analytic stand-ins,
+        old profile) that just got replaced."""
+        meas: dict = {}
+        for eng in (self._local, self._dist):
+            if eng is not None:
+                meas.update(eng.measurements())
+        if meas != self._applied_measurements:
+            self._applied_measurements = meas
+            self.stats = self._base_stats.with_measurements(meas)
+            self._plan_cache.clear()
+        gen = P.calibration_generation()
+        if gen != self._profile_generation:
+            self._profile_generation = gen
+            self._plan_cache.clear()
+        return self.stats
+
+    @staticmethod
+    def _query_key(q):
+        try:
+            key = q.key()
+            hash(key)           # force the check: freeze() may pass
+            return key          # exotic values through unhashed
+        except TypeError:       # unhashable parameter value: skip caching
+            return None
+
+    def plan(self, q) -> P.Plan:
+        """Cost every (engine, variant) pair and pick one (cached per
+        query shape)."""
+        stats = self.current_stats()
+        key = self._query_key(q)
+        if key is not None and key in self._plan_cache:
+            self._plan_cache.move_to_end(key)
+            return self._plan_cache[key]
+        defn = R.get(q.algorithm)
+        specs = P.specs_for(q.algorithm, stats, count_only=q.count_only,
+                            **q.params)
+        plan = P.choose_plan(stats, specs, self.n_chips)
+        chosen_engine = plan.engine
+        if self.force_engine:
+            plan = dataclasses.replace(plan, engine=self.force_engine,
+                                       reason=f"forced: {self.force_engine}")
+        if plan.engine not in defn.engines:
+            # capability clamp wins over both the cost model and forcing
+            plan = dataclasses.replace(
+                plan, engine=defn.engines[0],
+                reason=f"{q.algorithm} runs on {'/'.join(defn.engines)} "
+                       f"only")
+        if len(specs) > 1 and plan.engine != chosen_engine:
+            # engine was overridden: re-pick the cheapest variant for it
+            best = P.best_spec_for_engine(stats, specs, plan.engine,
+                                          self.n_chips)
+            plan = dataclasses.replace(plan, variant=best.variant)
+        if key is not None and self._plan_cache_size:
+            self._plan_cache[key] = plan
+            while len(self._plan_cache) > self._plan_cache_size:
+                self._plan_cache.popitem(last=False)
+        return plan
+
+    def execute(self, q, plan: P.Plan) -> QueryResult:
+        r = self.engine(plan.engine).run(
+            q.algorithm, q.params, count_only=q.count_only,
+            variant=plan.variant)
+        r.meta["plan"] = plan
+        return r
+
+
+class GraphAnalyticsService:
+    """Catalog + admission + scheduling + fusion over GraphContexts.
+
+    One instance serves many snapshots and many in-flight queries.  The
+    result cache is shared across the whole catalog and keyed on
+    ``(content digest, algorithm, frozen params, count_only)`` — engine-
+    and variant-free, because results are contractually independent of
+    both — so byte-identical snapshots hit each other's entries no
+    matter which engine answered first.
+    """
+
+    def __init__(self, cache_size: int = 256,
+                 result_cache: Optional[OrderedDict] = None,
+                 interactive_threshold_s: Optional[float] = None,
+                 admission_budget_s: Optional[float] = None,
+                 history_size: int = 1024):
+        self._catalog: dict[str, GraphContext] = {}
+        self._by_digest: dict[tuple, GraphContext] = {}
+        self.cache_size = cache_size
+        self._result_cache: OrderedDict = (
+            OrderedDict() if result_cache is None else result_cache)
+        self.cache_stats = {"hits": 0, "misses": 0}
+        # None -> follow the active calibration profile (so a
+        # load_calibration() retunes live services)
+        self._interactive_threshold_s = interactive_threshold_s
+        self._admission_budget_s = admission_budget_s
+        # tickets/results/log are bounded: a long-lived service fielding
+        # continuous traffic must not accrete one ticket + one O(V)
+        # result per query forever.  Only *resolved* tickets age out
+        # (oldest first, once history_size is exceeded); pending tickets
+        # are never evicted.
+        self.history_size = history_size
+        self._tickets: dict[int, QueryTicket] = {}
+        self._results: dict[int, QueryResult] = {}
+        self._resolved_order: deque = deque()
+        self._next_ticket = 0
+        self._queues: dict[tuple, deque] = {}   # (engine, tier) -> tickets
+        self.execution_log: deque = deque(maxlen=history_size)
+        self.stats = {"submitted": 0, "rejected": 0, "executed": 0,
+                      "failed": 0, "fused_batches": 0, "fused_tickets": 0}
+
+    # -- tier thresholds ----------------------------------------------------
+    @property
+    def interactive_threshold_s(self) -> float:
+        if self._interactive_threshold_s is not None:
+            return self._interactive_threshold_s
+        return P.active_calibration().interactive_threshold_s
+
+    @property
+    def admission_budget_s(self) -> float:
+        if self._admission_budget_s is not None:
+            return self._admission_budget_s
+        return P.active_calibration().admission_budget_s
+
+    # -- catalog ------------------------------------------------------------
+    def add_graph(self, name: str, coo: G.GraphCOO, mesh=None,
+                  n_data: int = 1, n_model: int = 1,
+                  local_max_degree: int = 128,
+                  force_engine: Optional[str] = None,
+                  plan_cache_size: Optional[int] = None) -> GraphContext:
+        """Register a snapshot under ``name``.  Byte-identical snapshots
+        with the same engine configuration share one ``GraphContext`` —
+        the catalog-level dedup that makes reloading a snapshot free.
+        ``plan_cache_size`` defaults to the service's ``cache_size``, so
+        ``cache_size=0`` disables plan caching alongside result caching."""
+        ctx = GraphContext(coo, mesh=mesh, n_data=n_data, n_model=n_model,
+                           local_max_degree=local_max_degree,
+                           force_engine=force_engine,
+                           plan_cache_size=(self.cache_size
+                                            if plan_cache_size is None
+                                            else plan_cache_size))
+        dedup_key = (coo.content_digest(),) + ctx.config_key()
+        existing = self._by_digest.get(dedup_key)
+        if existing is not None:
+            ctx = existing
+        else:
+            self._by_digest[dedup_key] = ctx
+        self._catalog[name] = ctx
+        return ctx
+
+    def remove_graph(self, name: str) -> None:
+        """Drop ``name`` from the catalog — the eviction path for
+        rolling-snapshot traffic.  Pending tickets pinned their context
+        at submit, so they still execute against the snapshot they were
+        admitted for; the context's device state is freed once the
+        catalog, the dedup map and every live ticket release it."""
+        ctx = self._catalog.pop(name, None)
+        if ctx is not None and ctx not in self._catalog.values():
+            self._by_digest = {k: v for k, v in self._by_digest.items()
+                               if v is not ctx}
+
+    def graph_names(self) -> list[str]:
+        return sorted(self._catalog)
+
+    def context(self, graph_name: str) -> GraphContext:
+        try:
+            return self._catalog[graph_name]
+        except KeyError:
+            raise KeyError(
+                f"unknown graph {graph_name!r}; catalog: "
+                f"{self.graph_names()}") from None
+
+    # -- result cache -------------------------------------------------------
+    def _result_key(self, ctx: GraphContext, q):
+        qkey = ctx._query_key(q)
+        if qkey is None:
+            return None
+        # content digest, not id(): a recycled address must never alias
+        # a dead graph's results, and byte-identical reloads must share.
+        # Engine and variant are deliberately absent — results are
+        # contractually identical across both, so either one's answer
+        # serves the query (the PR-3 variant argument, finished).
+        return (ctx.coo.content_digest(),) + qkey
+
+    def _cache_get(self, key) -> Optional[QueryResult]:
+        if key is None or key not in self._result_cache:
+            self.cache_stats["misses"] += 1
+            return None
+        self._result_cache.move_to_end(key)
+        self.cache_stats["hits"] += 1
+        hit = self._result_cache[key]
+        return dataclasses.replace(hit, meta={**hit.meta, "cache": "hit"})
+
+    def _cache_put(self, key, r: QueryResult) -> None:
+        if key is None or not self.cache_size:
+            return
+        self._result_cache[key] = r
+        while len(self._result_cache) > self.cache_size:
+            self._result_cache.popitem(last=False)
+
+    # -- synchronous path (GraphPlatform.query) -----------------------------
+    def call(self, graph_name: str, q) -> QueryResult:
+        """Plan → cache → execute, synchronously.  No admission control:
+        this is the library-compatible single-query path."""
+        ctx = self.context(graph_name)
+        plan = ctx.plan(q)
+        key = self._result_key(ctx, q)
+        hit = self._cache_get(key)
+        if hit is not None:
+            return hit
+        r = ctx.execute(q, plan)
+        self.stats["executed"] += 1
+        self._cache_put(key, r)
+        return r
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, graph_name: str, q) -> QueryTicket:
+        """Admit one query: plan it, classify its tier, queue it.
+
+        Raises :class:`AdmissionRejected` (plan attached) when the
+        estimate exceeds the admission budget.  Admitted tickets queue
+        FIFO per (engine, tier); nothing executes until ``drain`` or
+        ``result``.
+        """
+        ctx = self.context(graph_name)
+        plan = ctx.plan(q)
+        est = P.plan_cost(plan)
+        # an infinite estimate means the planner itself declared the
+        # (forced/clamped) engine infeasible — reject even under the
+        # default infinite budget, where `inf > inf` would admit it
+        if est > self.admission_budget_s or est == float("inf"):
+            self.stats["rejected"] += 1
+            raise AdmissionRejected(graph_name, q, plan, est,
+                                    self.admission_budget_s)
+        tier = ("interactive" if est <= self.interactive_threshold_s
+                else "batch")
+        defn = R.get(q.algorithm)
+        ticket = QueryTicket(
+            self._next_ticket, graph_name, q, plan, tier, est,
+            context=ctx,
+            fuse_key=self._fuse_key(defn, q) if defn.fusable else None)
+        self._next_ticket += 1
+        self._tickets[ticket.ticket_id] = ticket
+        self._queues.setdefault((plan.engine, tier), deque()).append(ticket)
+        self.stats["submitted"] += 1
+        return ticket
+
+    # -- resolution ---------------------------------------------------------
+    def drain(self) -> list[QueryTicket]:
+        """Run every queued ticket to completion, deterministically:
+        engines in fixed order, each engine's interactive queue strictly
+        before its batch queue, each queue FIFO — with batch tickets
+        coalesced into fused executions where the registry allows.
+        Returns the tickets finished by this call, in execution order."""
+        finished: list[QueryTicket] = []
+        for engine in ("local", "distributed"):
+            q_int = self._queues.get((engine, "interactive"))
+            while q_int:
+                t = q_int.popleft()
+                if t.status != "queued":    # resolved out of band
+                    continue
+                self._run_solo(t)
+                finished.append(t)
+            q_batch = self._queues.get((engine, "batch"))
+            while q_batch:
+                head = q_batch.popleft()
+                if head.status != "queued":
+                    continue
+                group = self._take_fuse_group(q_batch, head)
+                finished.extend(self._run_group(engine, group))
+        return finished
+
+    def result(self, ticket: QueryTicket) -> QueryResult:
+        """The ticket's result, executing work as needed.  Interactive
+        tickets bypass the batch queue entirely: only the ticket itself
+        runs.  Batch tickets drain the service (their fuse group rides
+        along for free)."""
+        t = self._tickets.get(ticket.ticket_id)
+        if t is not ticket:
+            raise ValueError(
+                f"ticket #{ticket.ticket_id} was not issued by this "
+                f"service (ids are per-service), or its result aged out "
+                f"of the {self.history_size}-entry history")
+        if t.status == "queued":
+            if t.tier == "interactive":
+                self._run_solo(t)
+            else:
+                self.drain()
+        if t.status == "failed":
+            raise t.error
+        return self._results[t.ticket_id]
+
+    def pending(self) -> list[QueryTicket]:
+        return [t for t in self._tickets.values() if t.status == "queued"]
+
+    # -- execution internals ------------------------------------------------
+    @staticmethod
+    def _fuse_key(defn: R.AlgorithmDef, q):
+        """The query's fuse compatibility key, computed once at submit
+        over *validated* params (the registry's fuse contract) — a
+        directly-constructed query without schema defaults filled must
+        not crash the scheduler.  ``None`` means unfusable: the ticket
+        runs solo and any schema error surfaces at execution, attributed
+        to that ticket."""
+        try:
+            return (defn.name, defn.fuse(defn.validate(q.params)))
+        except Exception:
+            return None
+
+    @staticmethod
+    def _take_fuse_group(queue: Optional[deque],
+                         head: QueryTicket) -> list[QueryTicket]:
+        """Pull every queued ticket fusable with ``head`` (same pinned
+        context, equal precomputed fuse key) out of ``queue``,
+        preserving the FIFO order of everything left behind."""
+        group = [head]
+        if queue is None or head.fuse_key is None:
+            return group
+        keep = deque()
+        while queue:
+            t = queue.popleft()
+            if t.status != "queued":
+                continue
+            if t.context is head.context and t.fuse_key == head.fuse_key:
+                group.append(t)
+            else:
+                keep.append(t)
+        queue.extend(keep)
+        return group
+
+    def _finish(self, t: QueryTicket, r: QueryResult) -> None:
+        t.status = "done"
+        self._results[t.ticket_id] = r
+        self._age_out(t)
+
+    def _fail(self, tickets, error: BaseException) -> None:
+        """An execution raised: the tickets must not be stranded (out of
+        every queue, forever 'queued').  They finish as 'failed' and
+        ``result`` re-raises the stored error; the drain continues with
+        the rest of the queue."""
+        for t in tickets:
+            t.status = "failed"
+            t.error = error
+            self._age_out(t)
+        self.stats["failed"] += len(tickets)
+
+    def _age_out(self, t: QueryTicket) -> None:
+        """Record ``t`` as resolved and evict the oldest resolved
+        tickets (and their stored results) beyond ``history_size``."""
+        self._resolved_order.append(t.ticket_id)
+        while len(self._resolved_order) > max(self.history_size, 0):
+            old = self._resolved_order.popleft()
+            self._tickets.pop(old, None)
+            self._results.pop(old, None)
+
+    def _log(self, engine: str, tier: str, tickets, fused: bool,
+             algorithm: str) -> None:
+        self.execution_log.append({
+            "engine": engine, "tier": tier, "fused": fused,
+            "algorithm": algorithm,
+            "tickets": [t.ticket_id for t in tickets]})
+
+    def _run_solo(self, t: QueryTicket) -> None:
+        ctx = t.context
+        key = self._result_key(ctx, t.query)
+        hit = self._cache_get(key)
+        if hit is not None:
+            self._finish(t, hit)
+            return
+        try:
+            r = ctx.execute(t.query, t.plan)
+        except Exception as e:
+            self._fail([t], e)
+            return
+        self.stats["executed"] += 1
+        self._cache_put(key, r)
+        self._finish(t, r)
+        self._log(t.plan.engine, t.tier, [t], fused=False,
+                  algorithm=t.query.algorithm)
+
+    def _run_group(self, engine: str,
+                   group: list[QueryTicket]) -> list[QueryTicket]:
+        """Execute one fuse group: cached tickets answered for free, the
+        rest as a single fused batch program (or solo when only one —
+        or the algorithm has no batch path — remains)."""
+        ctx = group[0].context
+        run: list[QueryTicket] = []
+        for t in group:
+            hit = self._cache_get(self._result_key(ctx, t.query))
+            if hit is not None:
+                self._finish(t, hit)
+            else:
+                run.append(t)
+        if not run:
+            return group
+        defn = R.get(group[0].query.algorithm)
+        if len(run) == 1 or not defn.fusable:
+            for t in run:
+                try:
+                    r = ctx.execute(t.query, t.plan)
+                except Exception as e:
+                    self._fail([t], e)
+                    continue
+                self.stats["executed"] += 1
+                self._cache_put(self._result_key(ctx, t.query), r)
+                self._finish(t, r)
+                self._log(engine, "batch", [t], fused=False,
+                          algorithm=t.query.algorithm)
+            return group
+        try:
+            results = ctx.engine(engine).run_batch(
+                defn, [t.query.params for t in run],
+                count_only=[t.query.count_only for t in run])
+        except Exception as e:
+            self._fail(run, e)
+            return group
+        self.stats["executed"] += 1
+        self.stats["fused_batches"] += 1
+        self.stats["fused_tickets"] += len(run)
+        for t, r in zip(run, results):
+            r.meta["plan"] = t.plan
+            # the cached copy drops 'fused' — it describes THIS run, and
+            # a later hit replaying it would claim a fusion that never
+            # happened for that caller (the ticket keeps the full meta)
+            cached = dataclasses.replace(
+                r, meta={k: v for k, v in r.meta.items() if k != "fused"})
+            self._cache_put(self._result_key(ctx, t.query), cached)
+            self._finish(t, r)
+        self._log(engine, "batch", run, fused=True,
+                  algorithm=defn.name)
+        return group

@@ -16,6 +16,8 @@ Three guarantees the registry refactor must hold:
    cacheable through ``GraphPlatform`` with zero edits to the
    engine/planner/query layers.
 """
+from collections import OrderedDict
+
 import numpy as np
 import pytest
 
@@ -280,15 +282,30 @@ def test_differing_params_miss(platform):
     assert platform.cache_stats["misses"] == 3
 
 
-def test_cache_respects_force_engine(graphs):
-    """Same query, different engine -> different cache entries."""
+def test_cache_engine_independent(graphs):
+    """Results are contractually engine-independent, so the cache key
+    carries no engine: the same query re-planned onto the other engine
+    (``force_engine`` toggled) is a *hit* through a shared store — the
+    spurious-miss bug this PR fixed.  Distinct stores still miss."""
     auto = GraphPlatform(graphs[True], n_data=4)
     forced = GraphPlatform(graphs[True], n_data=4,
                            force_engine="distributed")
     q = GraphQuery.connected_components(count_only=True)
     assert auto.query(q).engine == "local"
-    assert forced.query(q).engine == "distributed"
+    assert forced.query(q).engine == "distributed"   # separate stores miss
     assert auto.query(q).value == forced.query(q).value
+
+    shared = OrderedDict()
+    local = GraphPlatform(graphs[True], n_data=4, result_cache=shared)
+    first = local.query(q)
+    assert first.engine == "local"
+    re_planned = GraphPlatform(graphs[True], n_data=4,
+                               force_engine="distributed",
+                               result_cache=shared)
+    r = re_planned.query(q)
+    assert r.meta.get("cache") == "hit"          # engine not in the key
+    assert r.value == first.value
+    assert re_planned._dist is None              # engine never built
 
 
 def test_cache_lru_eviction(graphs):
