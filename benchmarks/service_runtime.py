@@ -1,0 +1,156 @@
+"""Service-runtime sweep: drain throughput and interactive-tier latency
+vs worker count.
+
+The concurrent runtime's pitch is that a worker pool over the
+per-(engine, tier) queues overlaps the two engines while interactive
+tickets preempt batch at dequeue time.  This sweep measures that claim
+on a seeded mixed-tier workload over a two-snapshot catalog (one graph
+pinned to each engine, so the pool has two independent execution
+streams):
+
+  * end-to-end ``drain`` wall time and throughput (tickets/s) at each
+    worker count (1 = the serial reference schedule);
+  * interactive- and batch-tier p50/p99 submit→resolution latency from
+    ``service.metrics()`` — the numbers the "interactive beats batch"
+    test asserts qualitatively;
+  * fusion width, as a sanity check that batch coalescing survives
+    concurrency.
+
+Results land in ``BENCH_service_runtime.json`` (``--out`` overrides),
+starting the perf trajectory for the runtime.  Caching is disabled for
+the sweep — a warm result cache would answer repeated queries without
+executing anything and turn the measurement into a cache benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core.query import GraphQuery
+from repro.core.service import GraphAnalyticsService
+from repro.data import synthetic as S
+
+WORKER_SWEEP = (1, 2, 4, 8)
+N_VERTICES = 2_000
+N_TICKETS = 120
+SEED = 1234
+
+
+def _build_graphs():
+    src, dst = S.user_follow_graph(N_VERTICES, 6.0, seed=7)
+    g_local = G.build_coo(src, dst, N_VERTICES)
+    src, dst = S.user_follow_graph(N_VERTICES, 4.0, seed=13)
+    g_dist = G.build_coo(src, dst, N_VERTICES)
+    return g_local, g_dist
+
+
+def _service(g_local, g_dist, threshold=None):
+    svc = GraphAnalyticsService(cache_size=0,
+                                interactive_threshold_s=threshold)
+    svc.add_graph("local_g", g_local, force_engine="local")
+    svc.add_graph("dist_g", g_dist, n_data=4, force_engine="distributed")
+    return svc
+
+
+def _workload(n_tickets=N_TICKETS, seed=SEED):
+    """Seeded ticket mix: fusable traversals, fixpoints, cheap counts."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_tickets):
+        name = ("local_g", "dist_g")[int(rng.integers(0, 2))]
+        kind = int(rng.integers(0, 5))
+        if kind == 0:
+            q = GraphQuery.bfs([int(rng.integers(0, N_VERTICES))])
+        elif kind == 1:
+            q = GraphQuery.sssp(int(rng.integers(0, N_VERTICES)))
+        elif kind == 2:
+            q = GraphQuery.pagerank(max_iters=int(rng.integers(5, 20)))
+        elif kind == 3:
+            q = GraphQuery.degree_stats()
+        else:
+            q = GraphQuery.bfs([int(rng.integers(0, N_VERTICES))],
+                               count_only=True)
+        out.append((name, q))
+    return out
+
+
+def _median_threshold(svc, workload):
+    """Tier split at the workload's median plan estimate, so both tiers
+    carry real traffic in every sweep point."""
+    ests = [P.plan_cost(svc.context(name).plan(q)) for name, q in workload]
+    return float(np.median(ests))
+
+
+def _sweep_point(g_local, g_dist, threshold, workload, workers):
+    svc = _service(g_local, g_dist, threshold)
+    tickets = [svc.submit(name, q) for name, q in workload]
+    t0 = time.perf_counter()
+    svc.drain(workers=workers)
+    wall = time.perf_counter() - t0
+    bad = [t for t in tickets if t.status != "done"]
+    assert not bad, f"{len(bad)} tickets not done at workers={workers}"
+    m = svc.metrics()
+    lat = m["tier_latency_s"]
+    return {
+        "workers": workers,
+        "wall_s": wall,
+        "throughput_qps": len(tickets) / wall,
+        "interactive": {"count": lat["interactive"]["count"],
+                        "p50_s": lat["interactive"]["p50_s"],
+                        "p99_s": lat["interactive"]["p99_s"]},
+        "batch": {"count": lat["batch"]["count"],
+                  "p50_s": lat["batch"]["p50_s"],
+                  "p99_s": lat["batch"]["p99_s"]},
+        "fusion": {"batches": m["fusion"]["batches"],
+                   "tickets": m["fusion"]["tickets"],
+                   "mean_width": m["fusion"]["mean_width"]},
+    }
+
+
+def run(out=print):
+    g_local, g_dist = _build_graphs()
+    workload = _workload()
+    threshold = _median_threshold(_service(g_local, g_dist), workload)
+    out(f"# {N_TICKETS} tickets, 2 graphs (V={N_VERTICES}), "
+        f"tier threshold {threshold:.3g}s")
+    # warm pass: compile every pregel program once so the timed points
+    # measure scheduling, not tracing (the JIT cache is process-global)
+    _sweep_point(g_local, g_dist, threshold, workload, workers=2)
+    points = []
+    for w in WORKER_SWEEP:
+        p = _sweep_point(g_local, g_dist, threshold, workload, workers=w)
+        points.append(p)
+        out(f"workers={w}: {p['wall_s']:.3f}s wall, "
+            f"{p['throughput_qps']:.1f} qps, interactive p50 "
+            f"{p['interactive']['p50_s']:.4f}s p99 "
+            f"{p['interactive']['p99_s']:.4f}s")
+    return {
+        "benchmark": "service_runtime",
+        "workload": {"tickets": N_TICKETS, "seed": SEED,
+                     "n_vertices": N_VERTICES,
+                     "tier_threshold_s": threshold,
+                     "graphs": ["local_g (local)",
+                                "dist_g (distributed, n_data=4)"]},
+        "sweep": points,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_service_runtime.json",
+                    help="result JSON path")
+    args = ap.parse_args(argv)
+    result = run()
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

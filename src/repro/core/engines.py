@@ -25,6 +25,7 @@ registry's method table via ``__getattr__``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import numpy as np
@@ -67,53 +68,75 @@ class Engine:
         # Measured structure observed while building derived state,
         # fed back into GraphStats by the service/platform layer.
         self._measured: dict = {}
+        # One execution at a time per engine instance: the service
+        # runtime runs one worker per engine, and a direct caller racing
+        # a worker must not observe a half-built ELL or two interleaved
+        # writes to the per-algorithm memo.  RLock: runners re-enter the
+        # lazy properties from inside run()/run_batch().
+        self._exec_lock = threading.RLock()
+        # Measurements are read by the *planner* path (submit-time
+        # current_stats) while a worker may hold _exec_lock for a long
+        # batch run — a separate lock keeps submit latency flat.
+        self._meta_lock = threading.Lock()
 
     # -- cached graph state -------------------------------------------------
     @property
     def sharded(self) -> ShardedCOO:
         """Edge shards, packed once — repeated interactive queries must
         not repay the O(E) host-side partition."""
-        if self._sharded is None:
-            self._sharded = partition(self.coo, self.n_data, self.n_model)
-        return self._sharded
+        with self._exec_lock:
+            if self._sharded is None:
+                self._sharded = partition(self.coo, self.n_data,
+                                          self.n_model)
+            return self._sharded
 
     @property
     def ell(self) -> G.GraphELL:
         """Degree-capped ELL adjacency (in-direction), built once."""
-        if self._ell is None:
-            coo = self.coo
-            src = np.asarray(coo.src)[: coo.n_edges]
-            dst = np.asarray(coo.dst)[: coo.n_edges]
-            w = np.asarray(coo.w)[: coo.n_edges]
-            if coo.n_edges:
-                # the true (uncapped) max in-degree falls out of the ELL
-                # build for free — record it for the planner's stats
-                self._measured["max_degree"] = int(
-                    np.bincount(dst, minlength=coo.n_vertices).max())
-            self._ell = G.build_ell(src, dst, coo.n_vertices,
-                                    self.max_degree, w=w, direction="in")
-        return self._ell
+        with self._exec_lock:
+            if self._ell is None:
+                coo = self.coo
+                src = np.asarray(coo.src)[: coo.n_edges]
+                dst = np.asarray(coo.dst)[: coo.n_edges]
+                w = np.asarray(coo.w)[: coo.n_edges]
+                if coo.n_edges:
+                    # the true (uncapped) max in-degree falls out of the
+                    # ELL build for free — record it for planner stats
+                    md = int(np.bincount(
+                        dst, minlength=coo.n_vertices).max())
+                    with self._meta_lock:
+                        self._measured["max_degree"] = md
+                self._ell = G.build_ell(src, dst, coo.n_vertices,
+                                        self.max_degree, w=w,
+                                        direction="in")
+            return self._ell
 
     @property
     def oriented(self) -> G.OrientedELL:
         """Degree-ordered sorted-neighbor orientation, built once — the
         derived state of the ELL-intersect triangle path (exact, unlike
         the capped ``ell``; requires a symmetrized graph)."""
-        if self._oriented is None:
-            coo = self.coo
-            G.require_symmetric(coo, "oriented adjacency")
-            src = np.asarray(coo.src)[: coo.n_edges]
-            dst = np.asarray(coo.dst)[: coo.n_edges]
-            self._oriented = G.build_oriented_ell(src, dst, coo.n_vertices)
-            self._measured["oriented_width"] = self._oriented.max_out_degree
-        return self._oriented
+        with self._exec_lock:
+            if self._oriented is None:
+                coo = self.coo
+                G.require_symmetric(coo, "oriented adjacency")
+                src = np.asarray(coo.src)[: coo.n_edges]
+                dst = np.asarray(coo.dst)[: coo.n_edges]
+                self._oriented = G.build_oriented_ell(src, dst,
+                                                      coo.n_vertices)
+                with self._meta_lock:
+                    self._measured["oriented_width"] = \
+                        self._oriented.max_out_degree
+            return self._oriented
 
     def measurements(self) -> dict:
         """Measured graph structure observed so far (only fields whose
         derived state this engine has actually built) — the feedback
         path that replaces the planner's analytic stand-ins, e.g. the
-        triangle cost hook's d_max estimate, with ground truth."""
-        return dict(self._measured)
+        triangle cost hook's d_max estimate, with ground truth.  Safe to
+        call from the submit/plan path while a worker is executing."""
+        with self._meta_lock:
+            return dict(self._measured)
 
     # -- generic execution --------------------------------------------------
     def run(self, algorithm, params: Optional[dict] = None,
@@ -138,11 +161,15 @@ class Engine:
             G.require_symmetric(self.coo, defn.name)
         if variant is None and defn.variants:
             variant = self._select_variant(defn, p, count_only)
-        self.n_runs += 1
-        if count_only and defn.count_run is not None:
-            value, iters = self._invoke(defn.count_run, defn, p)
-            return QueryResult(value, self.name, iters)
-        value, iters = self._invoke(defn.runner_for(variant), defn, p)
+        with self._exec_lock:
+            self.n_runs += 1
+            # the fault-injection seam: per attempt, so the service's
+            # retry loop re-triggers an installed policy on every try
+            R.apply_fault(defn.name)
+            if count_only and defn.count_run is not None:
+                value, iters = self._invoke(defn.count_run, defn, p)
+                return QueryResult(value, self.name, iters)
+            value, iters = self._invoke(defn.runner_for(variant), defn, p)
         if count_only and defn.count is not None:
             value = defn.count(value)
         meta = {"variant": variant} if variant is not None else {}
@@ -174,8 +201,10 @@ class Engine:
         ps = [defn.validate(p) for p in params_list]
         if defn.requires_symmetric:
             G.require_symmetric(self.coo, defn.name)
-        self.n_runs += 1
-        values, iters, fused_meta = defn.batch_runner(self, ps)
+        with self._exec_lock:
+            self.n_runs += 1
+            R.apply_fault(defn.name)     # one fused execution, one fault
+            values, iters, fused_meta = defn.batch_runner(self, ps)
         if len(values) != len(ps):
             raise ValueError(
                 f"{defn.name}: batch runner returned {len(values)} values "
@@ -197,7 +226,8 @@ class Engine:
         including any structure this engine has already measured)."""
         if defn.cost is None:
             return None
-        stats = P.GraphStats.of(self.coo).with_measurements(self._measured)
+        stats = P.GraphStats.of(self.coo).with_measurements(
+            self.measurements())
         specs = defn.cost(stats, params, count_only)
         if isinstance(specs, P.QuerySpec):
             return specs.variant

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from collections import OrderedDict
 from typing import Callable, Optional
 
@@ -208,6 +209,12 @@ def _shard_combine(agg, op, axis):
 # is what turns that from a leak into a window.
 _JIT_CACHE: OrderedDict = OrderedDict()
 JIT_CACHE_MAX = 64
+# The service runtime executes on worker threads (one per engine); the
+# LRU's get/move_to_end/popitem sequences are not atomic under free
+# threading, so guard them.  Building a missed program happens outside
+# the lock — two threads may race to compile the same key and the loser
+# simply overwrites with an equivalent entry.
+_JIT_CACHE_LOCK = threading.Lock()
 
 
 def _mesh_cache_key(mesh):
@@ -222,21 +229,23 @@ def _mesh_cache_key(mesh):
 
 def _jit_cache_get(key):
     """Returns (cached fn or None, hashable key or None)."""
-    try:
-        fn = _JIT_CACHE.get(key)
-    except TypeError:              # unhashable spec (closure consts)
-        return None, None
-    if fn is not None:
-        _JIT_CACHE.move_to_end(key)
-    return fn, key
+    with _JIT_CACHE_LOCK:
+        try:
+            fn = _JIT_CACHE.get(key)
+        except TypeError:          # unhashable spec (closure consts)
+            return None, None
+        if fn is not None:
+            _JIT_CACHE.move_to_end(key)
+        return fn, key
 
 
 def _jit_cache_put(key, fn) -> None:
     if key is None:
         return
-    _JIT_CACHE[key] = fn
-    while len(_JIT_CACHE) > JIT_CACHE_MAX:
-        _JIT_CACHE.popitem(last=False)
+    with _JIT_CACHE_LOCK:
+        _JIT_CACHE[key] = fn
+        while len(_JIT_CACHE) > JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
 
 
 def run_pregel(

@@ -198,3 +198,10 @@ class GraphPlatform:
 
     def query(self, q: GraphQuery) -> QueryResult:
         return self.service.call(self.GRAPH, q)
+
+    def metrics(self) -> dict:
+        """The service tier's observability snapshot (queue depths,
+        latency histograms, cache hit rate, retry counters) for this
+        platform's one-graph service — see
+        :meth:`GraphAnalyticsService.metrics`."""
+        return self.service.metrics()

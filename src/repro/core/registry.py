@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import pkgutil
+import threading
+import time
 from typing import Any, Callable, Mapping, Optional
 
 import numpy as np
@@ -280,6 +282,109 @@ def method_table() -> dict[str, tuple[AlgorithmDef, bool]]:
                 table[defn.count_method] = (defn, True)
         _METHOD_TABLE = table
     return _METHOD_TABLE
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+#
+# The registry is where runners live, so it is also the seam where the
+# service's failure paths are driven deterministically: a FaultPolicy
+# installed against an algorithm name wraps every execution of that
+# algorithm (the engines call ``apply_fault`` immediately before
+# invoking the runner — solo and fused paths alike).  Production code
+# never installs one; the runtime test harness uses them to exercise
+# retry, dead-letter and slow-batch behaviour without flaky sleeps or
+# monkeypatching engine internals.
+
+class FaultInjected(RuntimeError):
+    """The error a fault policy raises — a *retryable* runtime failure
+    (unlike schema ``ValueError``s, which dead-letter immediately)."""
+
+
+class FaultPolicy:
+    """One injected failure behaviour.  ``apply`` runs right before the
+    algorithm's runner; it may raise (failure) or sleep (delay).  Stock
+    policies below; anything with an ``apply(algorithm)`` works."""
+
+    def apply(self, algorithm: str) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class FailNTimes(FaultPolicy):
+    """Fail the first ``n`` executions, then succeed forever — the
+    retry-then-success driver.  Thread-safe: concurrent workers see
+    exactly ``n`` failures in total."""
+
+    def __init__(self, n: int, message: str = "injected fault"):
+        self.n = int(n)
+        self.message = message
+        self._remaining = int(n)
+        self._lock = threading.Lock()
+
+    def apply(self, algorithm: str) -> None:
+        with self._lock:
+            if self._remaining <= 0:
+                return
+            self._remaining -= 1
+            k = self.n - self._remaining
+        raise FaultInjected(
+            f"{algorithm}: {self.message} ({k}/{self.n})")
+
+
+class FailAlways(FaultPolicy):
+    """Every execution fails — the dead-letter driver."""
+
+    def __init__(self, message: str = "injected fault"):
+        self.message = message
+
+    def apply(self, algorithm: str) -> None:
+        raise FaultInjected(f"{algorithm}: {self.message}")
+
+
+class Delay(FaultPolicy):
+    """Every execution sleeps ``seconds`` first — the slow-batch-ticket
+    driver for latency/overlap tests (optionally failing afterwards)."""
+
+    def __init__(self, seconds: float, then_fail: bool = False):
+        self.seconds = float(seconds)
+        self.then_fail = then_fail
+
+    def apply(self, algorithm: str) -> None:
+        time.sleep(self.seconds)
+        if self.then_fail:
+            raise FaultInjected(f"{algorithm}: injected fault after "
+                                f"{self.seconds}s delay")
+
+
+_FAULTS: dict[str, FaultPolicy] = {}
+_FAULTS_LOCK = threading.Lock()
+
+
+def install_fault(name: str, policy: FaultPolicy) -> FaultPolicy:
+    """Install ``policy`` against algorithm ``name`` (replacing any
+    previous one).  Returns the policy for chaining."""
+    with _FAULTS_LOCK:
+        _FAULTS[name] = policy
+    return policy
+
+
+def uninstall_fault(name: Optional[str] = None) -> None:
+    """Remove one algorithm's fault policy, or all of them (``None``)."""
+    with _FAULTS_LOCK:
+        if name is None:
+            _FAULTS.clear()
+        else:
+            _FAULTS.pop(name, None)
+
+
+def apply_fault(name: str) -> None:
+    """Run the installed fault policy for ``name``, if any — the hook
+    the engines call per execution attempt."""
+    with _FAULTS_LOCK:
+        policy = _FAULTS.get(name)
+    if policy is not None:
+        policy.apply(name)
 
 
 # ---------------------------------------------------------------------------

@@ -16,12 +16,24 @@ module is that service tier:
   (thresholds come from the active :class:`~repro.core.planner.
   CalibrationProfile` unless overridden), and rejects over-budget
   queries up front with the plan attached — the user sees *why* before
-  any engine burns a cycle.
-* **Deterministic FIFO scheduling** — tickets queue per (engine, tier);
-  ``drain`` runs each engine's interactive queue before its batch
-  queue, in submission order.  ``result(ticket)`` on an interactive
-  ticket executes it immediately, bypassing all queued batch work (the
-  paper's "<2 s count while the 10-min table job waits" property).
+  any engine burns a cycle.  Queues are bounded: a tier at its depth
+  budget rejects with a typed :class:`~repro.core.runtime.Backpressure`
+  instead of accreting unbounded work.
+* **Concurrent runtime** — ``drain(workers=N)`` runs the queues on a
+  worker pool (one execution at a time per engine instance, enforced by
+  the engine's own lock), so a fused batch on one engine overlaps
+  interactive traffic on the other.  Workers *preempt at dequeue time*:
+  every scan serves all interactive queues before any batch queue, so
+  queued interactive tickets jump every batch group that has not
+  started yet.  Per-ticket results are byte-identical to a serial
+  ``drain()`` — the fusion contract (slices bit-identical to solo runs)
+  makes results order-independent.
+* **Retry & dead-letter** — a failed execution retries under the
+  service's :class:`~repro.core.runtime.RetryPolicy` (jittered
+  exponential backoff, deterministic per ticket given the service
+  seed); schema-class errors and tickets out of attempts land in the
+  ``dead-letter`` state keeping their full exception chain, ``result``
+  re-raises, and the drain continues with the rest of the queue.
 * **Fused batch execution** — the NScale insight: many small per-source
   computations over one graph should run as *one* shared execution.
   The scheduler coalesces queued batch tickets with equal
@@ -30,6 +42,10 @@ module is that service tier:
   ``[V, K]`` pregel program, K jaccard pair-batches as one kernel
   call — and scatters the per-ticket results (each bit-identical to a
   solo run) back through the shared result cache.
+* **Metrics** — ``metrics()`` snapshots queue depths, per-tier latency
+  histograms, cache hit rates, fusion widths and retry/dead-letter
+  counters under one lock — the in-process analogue of the exemplar
+  queue-worker stacks' Prometheus gauges.
 
 ``GraphPlatform`` (``repro.core.query``) survives as a thin per-graph
 facade over these primitives: its synchronous ``query`` is
@@ -38,13 +54,21 @@ facade over these primitives: its synchronous ``query`` is
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from collections import OrderedDict, deque
 from typing import Any, Optional
 
 from repro.core import graph as G
 from repro.core import planner as P
 from repro.core import registry as R
+from repro.core import runtime as RT
 from repro.core.engines import DistributedEngine, LocalEngine, QueryResult
+
+# re-exported so service users see one import surface for the typed
+# submit-time rejections (AdmissionRejected lives here, Backpressure in
+# runtime.py next to the policies that drive it)
+Backpressure = RT.Backpressure
 
 
 class AdmissionRejected(Exception):
@@ -74,7 +98,13 @@ class QueryTicket:
     ``remove_graph``) never redirects queued work onto a different
     snapshot — the ticket executes against the bytes it was admitted
     for.  ``fuse_key`` is computed once at submit (over validated
-    params); ``None`` means unfusable."""
+    params); ``None`` means unfusable.
+
+    Lifecycle: ``queued`` → ``running`` (claimed by a worker or an
+    inline ``result``) → ``done`` | ``dead-letter``.  A dead-lettered
+    ticket keeps its exception chain in ``error`` (attempt k's error is
+    the ``__cause__`` of attempt k+1's) and ``attempts`` records how
+    many executions it consumed."""
 
     ticket_id: int
     graph_name: str
@@ -82,11 +112,13 @@ class QueryTicket:
     plan: P.Plan
     tier: str                     # 'interactive' | 'batch'
     est_s: float
-    status: str = "queued"        # 'queued' | 'done' | 'failed'
+    status: str = "queued"        # | 'running' | 'done' | 'dead-letter'
     context: Any = dataclasses.field(default=None, repr=False)
     fuse_key: Any = dataclasses.field(default=None, repr=False)
     error: Optional[BaseException] = dataclasses.field(default=None,
                                                        repr=False)
+    attempts: int = 0
+    queued_at: float = dataclasses.field(default=0.0, repr=False)
 
 
 class GraphContext:
@@ -120,6 +152,10 @@ class GraphContext:
         self._plan_cache: OrderedDict = OrderedDict()
         self._applied_measurements: dict = {}
         self._profile_generation = P.calibration_generation()
+        # submit-time planning may race worker-thread executions that
+        # feed measurements back; the plan cache and stats swap are the
+        # shared state (engine construction is also guarded here)
+        self._lock = threading.RLock()
 
     def config_key(self) -> tuple:
         """What must match for two catalog entries to share this context."""
@@ -130,17 +166,19 @@ class GraphContext:
     # only pay when the planner actually routes there.
     @property
     def local(self) -> LocalEngine:
-        if self._local is None:
-            self._local = LocalEngine(self.coo, self._local_max_degree)
-        return self._local
+        with self._lock:
+            if self._local is None:
+                self._local = LocalEngine(self.coo, self._local_max_degree)
+            return self._local
 
     @property
     def distributed(self) -> DistributedEngine:
-        if self._dist is None:
-            self._dist = DistributedEngine(self.coo, mesh=self.mesh,
-                                           n_data=self._n_data,
-                                           n_model=self._n_model)
-        return self._dist
+        with self._lock:
+            if self._dist is None:
+                self._dist = DistributedEngine(self.coo, mesh=self.mesh,
+                                               n_data=self._n_data,
+                                               n_model=self._n_model)
+            return self._dist
 
     def engine(self, name: str):
         return self.local if name == "local" else self.distributed
@@ -151,19 +189,20 @@ class GraphContext:
         invalidates the plan cache, and so does a calibration-profile
         swap: cached plans were costed on constants (analytic stand-ins,
         old profile) that just got replaced."""
-        meas: dict = {}
-        for eng in (self._local, self._dist):
-            if eng is not None:
-                meas.update(eng.measurements())
-        if meas != self._applied_measurements:
-            self._applied_measurements = meas
-            self.stats = self._base_stats.with_measurements(meas)
-            self._plan_cache.clear()
-        gen = P.calibration_generation()
-        if gen != self._profile_generation:
-            self._profile_generation = gen
-            self._plan_cache.clear()
-        return self.stats
+        with self._lock:
+            meas: dict = {}
+            for eng in (self._local, self._dist):
+                if eng is not None:
+                    meas.update(eng.measurements())
+            if meas != self._applied_measurements:
+                self._applied_measurements = meas
+                self.stats = self._base_stats.with_measurements(meas)
+                self._plan_cache.clear()
+            gen = P.calibration_generation()
+            if gen != self._profile_generation:
+                self._profile_generation = gen
+                self._plan_cache.clear()
+            return self.stats
 
     @staticmethod
     def _query_key(q):
@@ -177,35 +216,37 @@ class GraphContext:
     def plan(self, q) -> P.Plan:
         """Cost every (engine, variant) pair and pick one (cached per
         query shape)."""
-        stats = self.current_stats()
-        key = self._query_key(q)
-        if key is not None and key in self._plan_cache:
-            self._plan_cache.move_to_end(key)
-            return self._plan_cache[key]
-        defn = R.get(q.algorithm)
-        specs = P.specs_for(q.algorithm, stats, count_only=q.count_only,
-                            **q.params)
-        plan = P.choose_plan(stats, specs, self.n_chips)
-        chosen_engine = plan.engine
-        if self.force_engine:
-            plan = dataclasses.replace(plan, engine=self.force_engine,
-                                       reason=f"forced: {self.force_engine}")
-        if plan.engine not in defn.engines:
-            # capability clamp wins over both the cost model and forcing
-            plan = dataclasses.replace(
-                plan, engine=defn.engines[0],
-                reason=f"{q.algorithm} runs on {'/'.join(defn.engines)} "
-                       f"only")
-        if len(specs) > 1 and plan.engine != chosen_engine:
-            # engine was overridden: re-pick the cheapest variant for it
-            best = P.best_spec_for_engine(stats, specs, plan.engine,
-                                          self.n_chips)
-            plan = dataclasses.replace(plan, variant=best.variant)
-        if key is not None and self._plan_cache_size:
-            self._plan_cache[key] = plan
-            while len(self._plan_cache) > self._plan_cache_size:
-                self._plan_cache.popitem(last=False)
-        return plan
+        with self._lock:
+            stats = self.current_stats()
+            key = self._query_key(q)
+            if key is not None and key in self._plan_cache:
+                self._plan_cache.move_to_end(key)
+                return self._plan_cache[key]
+            defn = R.get(q.algorithm)
+            specs = P.specs_for(q.algorithm, stats,
+                                count_only=q.count_only, **q.params)
+            plan = P.choose_plan(stats, specs, self.n_chips)
+            chosen_engine = plan.engine
+            if self.force_engine:
+                plan = dataclasses.replace(
+                    plan, engine=self.force_engine,
+                    reason=f"forced: {self.force_engine}")
+            if plan.engine not in defn.engines:
+                # capability clamp wins over the cost model and forcing
+                plan = dataclasses.replace(
+                    plan, engine=defn.engines[0],
+                    reason=f"{q.algorithm} runs on "
+                           f"{'/'.join(defn.engines)} only")
+            if len(specs) > 1 and plan.engine != chosen_engine:
+                # engine was overridden: re-pick its cheapest variant
+                best = P.best_spec_for_engine(stats, specs, plan.engine,
+                                              self.n_chips)
+                plan = dataclasses.replace(plan, variant=best.variant)
+            if key is not None and self._plan_cache_size:
+                self._plan_cache[key] = plan
+                while len(self._plan_cache) > self._plan_cache_size:
+                    self._plan_cache.popitem(last=False)
+            return plan
 
     def execute(self, q, plan: P.Plan) -> QueryResult:
         r = self.engine(plan.engine).run(
@@ -215,8 +256,26 @@ class GraphContext:
         return r
 
 
+@dataclasses.dataclass
+class _WorkUnit:
+    """One dequeued execution: a solo interactive ticket or a fused
+    batch group.  ``busy_key`` identifies the (context, engine) pair the
+    unit will occupy — the runtime never hands two units with the same
+    key to different workers (the engine lock would just serialize them
+    while an idle engine starves)."""
+
+    kind: str                     # 'solo' | 'group'
+    engine: str
+    tickets: list
+
+    @property
+    def busy_key(self) -> tuple:
+        return (id(self.tickets[0].context), self.engine)
+
+
 class GraphAnalyticsService:
-    """Catalog + admission + scheduling + fusion over GraphContexts.
+    """Catalog + admission + concurrent runtime + fusion over
+    GraphContexts.
 
     One instance serves many snapshots and many in-flight queries.  The
     result cache is shared across the whole catalog and keyed on
@@ -224,13 +283,26 @@ class GraphAnalyticsService:
     and variant-free, because results are contractually independent of
     both — so byte-identical snapshots hit each other's entries no
     matter which engine answered first.
+
+    ``workers`` sets the default drain parallelism (1 = the serial
+    reference schedule); ``retry`` the backoff/dead-letter policy;
+    ``tier_depth`` the per-tier queue depth budget (int for both tiers,
+    or ``{"interactive": ..., "batch": ...}``; ``None`` = unbounded);
+    ``seed`` makes every backoff schedule deterministic per ticket.
     """
+
+    ENGINE_ORDER = ("local", "distributed")
+    TIER_ORDER = ("interactive", "batch")
 
     def __init__(self, cache_size: int = 256,
                  result_cache: Optional[OrderedDict] = None,
                  interactive_threshold_s: Optional[float] = None,
                  admission_budget_s: Optional[float] = None,
-                 history_size: int = 1024):
+                 history_size: int = 1024,
+                 workers: int = 1,
+                 retry: Optional[RT.RetryPolicy] = None,
+                 tier_depth=None,
+                 seed: int = 0):
         self._catalog: dict[str, GraphContext] = {}
         self._by_digest: dict[tuple, GraphContext] = {}
         self.cache_size = cache_size
@@ -253,8 +325,29 @@ class GraphAnalyticsService:
         self._next_ticket = 0
         self._queues: dict[tuple, deque] = {}   # (engine, tier) -> tickets
         self.execution_log: deque = deque(maxlen=history_size)
-        self.stats = {"submitted": 0, "rejected": 0, "executed": 0,
-                      "failed": 0, "fused_batches": 0, "fused_tickets": 0}
+        self.stats = {"submitted": 0, "rejected": 0, "backpressure": 0,
+                      "executed": 0, "failed": 0, "retries": 0,
+                      "dead_letters": 0, "fused_batches": 0,
+                      "fused_tickets": 0}
+        # -- runtime ---------------------------------------------------
+        self.workers = max(int(workers), 1)
+        self.retry = RT.RetryPolicy() if retry is None else retry
+        self.seed = int(seed)
+        if tier_depth is None:
+            self._tier_depth: dict[str, Optional[int]] = {}
+        elif isinstance(tier_depth, int):
+            self._tier_depth = {t: tier_depth for t in self.TIER_ORDER}
+        else:
+            self._tier_depth = dict(tier_depth)
+        # one lock for all scheduler/bookkeeping state; the condition
+        # wakes workers when new work or a completion arrives, and
+        # result() waiters when a ticket resolves
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._busy: set = set()        # busy (context, engine) pairs
+        self._inflight = 0             # units currently executing
+        self._hist = {t: RT.LatencyHistogram() for t in self.TIER_ORDER}
+        self._fusion_widths: deque = deque(maxlen=4096)
 
     # -- tier thresholds ----------------------------------------------------
     @property
@@ -286,14 +379,15 @@ class GraphAnalyticsService:
                            plan_cache_size=(self.cache_size
                                             if plan_cache_size is None
                                             else plan_cache_size))
-        dedup_key = (coo.content_digest(),) + ctx.config_key()
-        existing = self._by_digest.get(dedup_key)
-        if existing is not None:
-            ctx = existing
-        else:
-            self._by_digest[dedup_key] = ctx
-        self._catalog[name] = ctx
-        return ctx
+        with self._lock:
+            dedup_key = (coo.content_digest(),) + ctx.config_key()
+            existing = self._by_digest.get(dedup_key)
+            if existing is not None:
+                ctx = existing
+            else:
+                self._by_digest[dedup_key] = ctx
+            self._catalog[name] = ctx
+            return ctx
 
     def remove_graph(self, name: str) -> None:
         """Drop ``name`` from the catalog — the eviction path for
@@ -301,21 +395,24 @@ class GraphAnalyticsService:
         at submit, so they still execute against the snapshot they were
         admitted for; the context's device state is freed once the
         catalog, the dedup map and every live ticket release it."""
-        ctx = self._catalog.pop(name, None)
-        if ctx is not None and ctx not in self._catalog.values():
-            self._by_digest = {k: v for k, v in self._by_digest.items()
-                               if v is not ctx}
+        with self._lock:
+            ctx = self._catalog.pop(name, None)
+            if ctx is not None and ctx not in self._catalog.values():
+                self._by_digest = {k: v for k, v in self._by_digest.items()
+                                   if v is not ctx}
 
     def graph_names(self) -> list[str]:
-        return sorted(self._catalog)
+        with self._lock:
+            return sorted(self._catalog)
 
     def context(self, graph_name: str) -> GraphContext:
-        try:
-            return self._catalog[graph_name]
-        except KeyError:
-            raise KeyError(
-                f"unknown graph {graph_name!r}; catalog: "
-                f"{self.graph_names()}") from None
+        with self._lock:
+            try:
+                return self._catalog[graph_name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown graph {graph_name!r}; catalog: "
+                    f"{self.graph_names()}") from None
 
     # -- result cache -------------------------------------------------------
     def _result_key(self, ctx: GraphContext, q):
@@ -330,20 +427,23 @@ class GraphAnalyticsService:
         return (ctx.coo.content_digest(),) + qkey
 
     def _cache_get(self, key) -> Optional[QueryResult]:
-        if key is None or key not in self._result_cache:
-            self.cache_stats["misses"] += 1
-            return None
-        self._result_cache.move_to_end(key)
-        self.cache_stats["hits"] += 1
-        hit = self._result_cache[key]
-        return dataclasses.replace(hit, meta={**hit.meta, "cache": "hit"})
+        with self._lock:
+            if key is None or key not in self._result_cache:
+                self.cache_stats["misses"] += 1
+                return None
+            self._result_cache.move_to_end(key)
+            self.cache_stats["hits"] += 1
+            hit = self._result_cache[key]
+            return dataclasses.replace(hit,
+                                       meta={**hit.meta, "cache": "hit"})
 
     def _cache_put(self, key, r: QueryResult) -> None:
-        if key is None or not self.cache_size:
-            return
-        self._result_cache[key] = r
-        while len(self._result_cache) > self.cache_size:
-            self._result_cache.popitem(last=False)
+        with self._lock:
+            if key is None or not self.cache_size:
+                return
+            self._result_cache[key] = r
+            while len(self._result_cache) > self.cache_size:
+                self._result_cache.popitem(last=False)
 
     # -- synchronous path (GraphPlatform.query) -----------------------------
     def call(self, graph_name: str, q) -> QueryResult:
@@ -356,7 +456,8 @@ class GraphAnalyticsService:
         if hit is not None:
             return hit
         r = ctx.execute(q, plan)
-        self.stats["executed"] += 1
+        with self._lock:
+            self.stats["executed"] += 1
         self._cache_put(key, r)
         return r
 
@@ -365,82 +466,165 @@ class GraphAnalyticsService:
         """Admit one query: plan it, classify its tier, queue it.
 
         Raises :class:`AdmissionRejected` (plan attached) when the
-        estimate exceeds the admission budget.  Admitted tickets queue
+        estimate exceeds the admission budget, and
+        :class:`~repro.core.runtime.Backpressure` when the destination
+        queue is at its tier's depth budget.  Admitted tickets queue
         FIFO per (engine, tier); nothing executes until ``drain`` or
         ``result``.
         """
         ctx = self.context(graph_name)
         plan = ctx.plan(q)
         est = P.plan_cost(plan)
-        # an infinite estimate means the planner itself declared the
-        # (forced/clamped) engine infeasible — reject even under the
-        # default infinite budget, where `inf > inf` would admit it
-        if est > self.admission_budget_s or est == float("inf"):
-            self.stats["rejected"] += 1
-            raise AdmissionRejected(graph_name, q, plan, est,
-                                    self.admission_budget_s)
-        tier = ("interactive" if est <= self.interactive_threshold_s
-                else "batch")
-        defn = R.get(q.algorithm)
-        ticket = QueryTicket(
-            self._next_ticket, graph_name, q, plan, tier, est,
-            context=ctx,
-            fuse_key=self._fuse_key(defn, q) if defn.fusable else None)
-        self._next_ticket += 1
-        self._tickets[ticket.ticket_id] = ticket
-        self._queues.setdefault((plan.engine, tier), deque()).append(ticket)
-        self.stats["submitted"] += 1
-        return ticket
+        with self._lock:
+            # an infinite estimate means the planner itself declared the
+            # (forced/clamped) engine infeasible — reject even under the
+            # default infinite budget, where `inf > inf` would admit it
+            if est > self.admission_budget_s or est == float("inf"):
+                self.stats["rejected"] += 1
+                raise AdmissionRejected(graph_name, q, plan, est,
+                                        self.admission_budget_s)
+            tier = ("interactive" if est <= self.interactive_threshold_s
+                    else "batch")
+            budget = self._tier_depth.get(tier)
+            if budget is not None:
+                depth = self._queue_depth(plan.engine, tier)
+                if depth >= budget:
+                    self.stats["backpressure"] += 1
+                    raise RT.Backpressure(graph_name, q, plan.engine,
+                                          tier, depth, budget)
+            defn = R.get(q.algorithm)
+            ticket = QueryTicket(
+                self._next_ticket, graph_name, q, plan, tier, est,
+                context=ctx,
+                fuse_key=self._fuse_key(defn, q) if defn.fusable else None,
+                queued_at=time.perf_counter())
+            self._next_ticket += 1
+            self._tickets[ticket.ticket_id] = ticket
+            self._queues.setdefault((plan.engine, tier),
+                                    deque()).append(ticket)
+            self.stats["submitted"] += 1
+            self._cond.notify_all()       # wake a parked worker
+            return ticket
+
+    def _queue_depth(self, engine: str, tier: str) -> int:
+        """Live (still-queued) depth of one queue — resolved-out-of-band
+        tickets linger in the deque until a dequeue skips them, so
+        ``len`` alone over-counts."""
+        q = self._queues.get((engine, tier))
+        if not q:
+            return 0
+        return sum(1 for t in q if t.status == "queued")
 
     # -- resolution ---------------------------------------------------------
-    def drain(self) -> list[QueryTicket]:
-        """Run every queued ticket to completion, deterministically:
-        engines in fixed order, each engine's interactive queue strictly
-        before its batch queue, each queue FIFO — with batch tickets
-        coalesced into fused executions where the registry allows.
-        Returns the tickets finished by this call, in execution order."""
+    def drain(self, workers: Optional[int] = None) -> list[QueryTicket]:
+        """Run every queued ticket to completion and return the tickets
+        finished by this call, in completion order.
+
+        ``workers=1`` (the default unless the service was built with
+        more) is the deterministic serial reference: engines in fixed
+        order, every interactive queue strictly before any batch queue,
+        each queue FIFO, batch tickets coalesced into fused executions
+        where the registry allows.  ``workers>=2`` runs the same
+        dequeue protocol from a thread pool — at most one in-flight
+        unit per (context, engine), interactive still preempting batch
+        at every dequeue — and per-ticket results are byte-identical to
+        the serial schedule (the fusion/caching contracts make results
+        order-independent)."""
+        n = self.workers if workers is None else max(int(workers), 1)
         finished: list[QueryTicket] = []
-        for engine in ("local", "distributed"):
-            q_int = self._queues.get((engine, "interactive"))
-            while q_int:
-                t = q_int.popleft()
-                if t.status != "queued":    # resolved out of band
-                    continue
-                self._run_solo(t)
-                finished.append(t)
-            q_batch = self._queues.get((engine, "batch"))
-            while q_batch:
-                head = q_batch.popleft()
-                if head.status != "queued":
-                    continue
-                group = self._take_fuse_group(q_batch, head)
-                finished.extend(self._run_group(engine, group))
+        if n == 1:
+            while True:
+                with self._lock:
+                    unit = self._next_unit()
+                if unit is None:
+                    break
+                self._execute_unit(unit, finished)
+            return finished
+        threads = [
+            threading.Thread(target=self._worker_loop, args=(finished,),
+                             name=f"gas-worker-{i}", daemon=True)
+            for i in range(n)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
         return finished
 
     def result(self, ticket: QueryTicket) -> QueryResult:
         """The ticket's result, executing work as needed.  Interactive
         tickets bypass the batch queue entirely: only the ticket itself
         runs.  Batch tickets drain the service (their fuse group rides
-        along for free)."""
-        t = self._tickets.get(ticket.ticket_id)
-        if t is not ticket:
-            raise ValueError(
-                f"ticket #{ticket.ticket_id} was not issued by this "
-                f"service (ids are per-service), or its result aged out "
-                f"of the {self.history_size}-entry history")
-        if t.status == "queued":
-            if t.tier == "interactive":
-                self._run_solo(t)
-            else:
+        along for free).  A ticket currently executing on a worker is
+        awaited, not re-run."""
+        with self._lock:
+            t = self._tickets.get(ticket.ticket_id)
+            if t is not ticket:
+                raise ValueError(
+                    f"ticket #{ticket.ticket_id} was not issued by this "
+                    f"service (ids are per-service), or its result aged "
+                    f"out of the {self.history_size}-entry history")
+        while True:
+            claimed = drain_needed = False
+            with self._cond:
+                if t.status == "done":
+                    return self._results[t.ticket_id]
+                if t.status == "dead-letter":
+                    raise t.error
+                if t.status == "running":
+                    self._cond.wait(0.05)     # a worker owns it: await
+                    continue
+                # queued: claim it (interactive) or drain the service
+                if t.tier == "interactive":
+                    t.status = "running"
+                    claimed = True
+                else:
+                    drain_needed = True
+            if claimed:
+                self._execute_unit(_WorkUnit("solo", t.plan.engine, [t]),
+                                   [])
+            elif drain_needed:
                 self.drain()
-        if t.status == "failed":
-            raise t.error
-        return self._results[t.ticket_id]
 
     def pending(self) -> list[QueryTicket]:
-        return [t for t in self._tickets.values() if t.status == "queued"]
+        with self._lock:
+            return [t for t in self._tickets.values()
+                    if t.status in ("queued", "running")]
 
-    # -- execution internals ------------------------------------------------
+    # -- metrics ------------------------------------------------------------
+    def metrics(self) -> dict:
+        """One consistent snapshot of the service's observable state:
+        live queue depths, counters, cache hit rate, per-tier latency
+        (submit→resolution) histograms with exact p50/p99 over the
+        sample window, fusion widths, and the retry policy's counters.
+        See docs/architecture.md for the field table."""
+        with self._lock:
+            depths = {f"{e}.{t}": self._queue_depth(e, t)
+                      for e in self.ENGINE_ORDER for t in self.TIER_ORDER}
+            hits = self.cache_stats["hits"]
+            misses = self.cache_stats["misses"]
+            total = hits + misses
+            widths = list(self._fusion_widths)
+            return {
+                "workers": self.workers,
+                "queue_depths": depths,
+                "tier_depth_budget": dict(self._tier_depth),
+                "counters": dict(self.stats),
+                "cache": {"hits": hits, "misses": misses,
+                          "hit_rate": (hits / total) if total else None},
+                "tier_latency_s": {t: h.snapshot()
+                                   for t, h in self._hist.items()},
+                "fusion": {
+                    "batches": self.stats["fused_batches"],
+                    "tickets": self.stats["fused_tickets"],
+                    "mean_width": (sum(widths) / len(widths)
+                                   if widths else None),
+                    "max_width": max(widths, default=None)},
+                "retry": {"max_attempts": self.retry.max_attempts,
+                          "retries": self.stats["retries"],
+                          "dead_letters": self.stats["dead_letters"]},
+            }
+
+    # -- scheduling internals -----------------------------------------------
     @staticmethod
     def _fuse_key(defn: R.AlgorithmDef, q):
         """The query's fuse compatibility key, computed once at submit
@@ -453,6 +637,39 @@ class GraphAnalyticsService:
             return (defn.name, defn.fuse(defn.validate(q.params)))
         except Exception:
             return None
+
+    def _next_unit(self, skip_busy: bool = False) -> Optional[_WorkUnit]:
+        """Dequeue the next work unit (caller holds the lock).
+
+        Interactive preemption lives here: every scan visits ALL
+        interactive queues before ANY batch queue, so an interactive
+        ticket submitted while batch work is queued is served by the
+        next free worker.  Per queue the order is strictly FIFO — a
+        head blocked on a busy (context, engine) parks its whole queue
+        rather than letting younger tickets overtake it.  Dequeued
+        tickets flip to ``running`` before the lock is released, so no
+        two workers (or a worker and an inline ``result``) ever claim
+        the same ticket."""
+        for tier in self.TIER_ORDER:
+            for engine in self.ENGINE_ORDER:
+                q = self._queues.get((engine, tier))
+                while q:
+                    head = q[0]
+                    if head.status != "queued":   # resolved out of band
+                        q.popleft()
+                        continue
+                    if skip_busy and \
+                            (id(head.context), engine) in self._busy:
+                        break                     # queue parked; next one
+                    q.popleft()
+                    if tier == "interactive":
+                        head.status = "running"
+                        return _WorkUnit("solo", engine, [head])
+                    group = self._take_fuse_group(q, head)
+                    for t in group:
+                        t.status = "running"
+                    return _WorkUnit("group", engine, group)
+        return None
 
     @staticmethod
     def _take_fuse_group(queue: Optional[deque],
@@ -475,21 +692,172 @@ class GraphAnalyticsService:
         queue.extend(keep)
         return group
 
-    def _finish(self, t: QueryTicket, r: QueryResult) -> None:
-        t.status = "done"
-        self._results[t.ticket_id] = r
-        self._age_out(t)
+    def _worker_loop(self, finished: list) -> None:
+        """One pool thread: claim units until the queues are empty and
+        nothing is in flight.  An in-flight unit never *creates* queued
+        work (retries run inline), but concurrent ``submit`` may — the
+        condition wakes parked workers for both new work and freed
+        (context, engine) pairs."""
+        while True:
+            with self._cond:
+                unit = self._next_unit(skip_busy=True)
+                if unit is None:
+                    if self._inflight == 0 and not self._any_queued():
+                        return
+                    self._cond.wait(0.05)
+                    continue
+                self._inflight += 1
+                self._busy.add(unit.busy_key)
+            try:
+                self._execute_unit(unit, finished)
+            finally:
+                with self._cond:
+                    self._inflight -= 1
+                    self._busy.discard(unit.busy_key)
+                    self._cond.notify_all()
 
-    def _fail(self, tickets, error: BaseException) -> None:
-        """An execution raised: the tickets must not be stranded (out of
-        every queue, forever 'queued').  They finish as 'failed' and
-        ``result`` re-raises the stored error; the drain continues with
-        the rest of the queue."""
-        for t in tickets:
-            t.status = "failed"
-            t.error = error
+    def _any_queued(self) -> bool:
+        return any(t.status == "queued"
+                   for q in self._queues.values() for t in q)
+
+    # -- execution internals ------------------------------------------------
+    def _backoff_seed(self, ticket_id: int) -> int:
+        # stable across runs for a fixed service seed and ticket id —
+        # the determinism the stress harness replays
+        return self.seed * 1_000_003 + ticket_id
+
+    def _run_with_retries(self, thunk, seed_id: int, tickets: list):
+        """Execute ``thunk`` under the retry policy.  Returns
+        ``(result, None)`` on success or ``(None, error)`` once the
+        policy gives up; ``error`` carries the full attempt chain
+        (attempt k's exception is the ``__cause__`` of attempt k+1's).
+        Sleeps follow the jittered schedule seeded per ticket, so a
+        replayed drain backs off identically."""
+        schedule = self.retry.schedule(self._backoff_seed(seed_id))
+        last: Optional[BaseException] = None
+        for attempt in range(1, self.retry.max_attempts + 1):
+            for t in tickets:
+                t.attempts = attempt
+            try:
+                return thunk(), None
+            except Exception as e:
+                if last is not None and e is not last \
+                        and e.__cause__ is None:
+                    e.__cause__ = last       # preserve the attempt chain
+                last = e
+                if not self.retry.retryable(e) \
+                        or attempt >= self.retry.max_attempts:
+                    return None, e
+                with self._lock:
+                    self.stats["retries"] += 1
+                time.sleep(schedule[attempt - 1])
+        return None, last                    # pragma: no cover
+
+    def _execute_unit(self, unit: _WorkUnit, finished: list) -> None:
+        """Run one dequeued unit to resolution (outside the lock; only
+        bookkeeping re-acquires it)."""
+        if unit.kind == "solo":
+            self._execute_solo(unit.tickets[0], finished)
+        else:
+            self._execute_group(unit.engine, unit.tickets, finished)
+
+    def _execute_solo(self, t: QueryTicket, finished: list) -> None:
+        ctx = t.context
+        key = self._result_key(ctx, t.query)
+        hit = self._cache_get(key)
+        if hit is not None:
+            self._finish(t, hit)
+            finished.append(t)
+            return
+        r, err = self._run_with_retries(
+            lambda: ctx.execute(t.query, t.plan), t.ticket_id, [t])
+        if err is not None:
+            self._dead_letter([t], err)
+            finished.append(t)
+            return
+        with self._lock:
+            self.stats["executed"] += 1
+            self._cache_put(key, r)
+            self._finish(t, r)
+            self._log(t.plan.engine, t.tier, [t], fused=False,
+                      algorithm=t.query.algorithm)
+        finished.append(t)
+
+    def _execute_group(self, engine: str, group: list[QueryTicket],
+                       finished: list) -> None:
+        """Execute one fuse group: cached tickets answered for free, the
+        rest as a single fused batch program (or solo when only one —
+        or the algorithm has no batch path — remains).  A failing fused
+        execution retries (and dead-letters) as a unit: every ticket in
+        it shares the attempt chain."""
+        ctx = group[0].context
+        run: list[QueryTicket] = []
+        for t in group:
+            hit = self._cache_get(self._result_key(ctx, t.query))
+            if hit is not None:
+                self._finish(t, hit)
+                finished.append(t)
+            else:
+                run.append(t)
+        if not run:
+            return
+        defn = R.get(group[0].query.algorithm)
+        if len(run) == 1 or not defn.fusable:
+            for t in run:
+                self._execute_solo(t, finished)
+            return
+        r, err = self._run_with_retries(
+            lambda: ctx.engine(engine).run_batch(
+                defn, [t.query.params for t in run],
+                count_only=[t.query.count_only for t in run]),
+            run[0].ticket_id, run)
+        if err is not None:
+            self._dead_letter(run, err)
+            finished.extend(run)
+            return
+        with self._lock:
+            self.stats["executed"] += 1
+            self.stats["fused_batches"] += 1
+            self.stats["fused_tickets"] += len(run)
+            self._fusion_widths.append(len(run))
+            for t, res in zip(run, r):
+                res.meta["plan"] = t.plan
+                # the cached copy drops 'fused' — it describes THIS run;
+                # a later hit replaying it would claim a fusion that
+                # never happened for that caller (the ticket keeps the
+                # full meta)
+                cached = dataclasses.replace(
+                    res, meta={k: v for k, v in res.meta.items()
+                               if k != "fused"})
+                self._cache_put(self._result_key(ctx, t.query), cached)
+                self._finish(t, res)
+            self._log(engine, "batch", run, fused=True,
+                      algorithm=defn.name)
+        finished.extend(run)
+
+    def _finish(self, t: QueryTicket, r: QueryResult) -> None:
+        with self._cond:
+            t.status = "done"
+            self._results[t.ticket_id] = r
+            self._hist[t.tier].observe(time.perf_counter() - t.queued_at)
             self._age_out(t)
-        self.stats["failed"] += len(tickets)
+            self._cond.notify_all()
+
+    def _dead_letter(self, tickets, error: BaseException) -> None:
+        """The retry policy gave up: the tickets must not be stranded
+        (out of every queue, forever pending).  They land in the
+        ``dead-letter`` state keeping the attempt chain, ``result``
+        re-raises, and the drain continues with the rest of the queue."""
+        with self._cond:
+            for t in tickets:
+                t.status = "dead-letter"
+                t.error = error
+                self._hist[t.tier].observe(
+                    time.perf_counter() - t.queued_at)
+                self._age_out(t)
+            self.stats["failed"] += len(tickets)
+            self.stats["dead_letters"] += len(tickets)
+            self._cond.notify_all()
 
     def _age_out(self, t: QueryTicket) -> None:
         """Record ``t`` as resolved and evict the oldest resolved
@@ -506,73 +874,3 @@ class GraphAnalyticsService:
             "engine": engine, "tier": tier, "fused": fused,
             "algorithm": algorithm,
             "tickets": [t.ticket_id for t in tickets]})
-
-    def _run_solo(self, t: QueryTicket) -> None:
-        ctx = t.context
-        key = self._result_key(ctx, t.query)
-        hit = self._cache_get(key)
-        if hit is not None:
-            self._finish(t, hit)
-            return
-        try:
-            r = ctx.execute(t.query, t.plan)
-        except Exception as e:
-            self._fail([t], e)
-            return
-        self.stats["executed"] += 1
-        self._cache_put(key, r)
-        self._finish(t, r)
-        self._log(t.plan.engine, t.tier, [t], fused=False,
-                  algorithm=t.query.algorithm)
-
-    def _run_group(self, engine: str,
-                   group: list[QueryTicket]) -> list[QueryTicket]:
-        """Execute one fuse group: cached tickets answered for free, the
-        rest as a single fused batch program (or solo when only one —
-        or the algorithm has no batch path — remains)."""
-        ctx = group[0].context
-        run: list[QueryTicket] = []
-        for t in group:
-            hit = self._cache_get(self._result_key(ctx, t.query))
-            if hit is not None:
-                self._finish(t, hit)
-            else:
-                run.append(t)
-        if not run:
-            return group
-        defn = R.get(group[0].query.algorithm)
-        if len(run) == 1 or not defn.fusable:
-            for t in run:
-                try:
-                    r = ctx.execute(t.query, t.plan)
-                except Exception as e:
-                    self._fail([t], e)
-                    continue
-                self.stats["executed"] += 1
-                self._cache_put(self._result_key(ctx, t.query), r)
-                self._finish(t, r)
-                self._log(engine, "batch", [t], fused=False,
-                          algorithm=t.query.algorithm)
-            return group
-        try:
-            results = ctx.engine(engine).run_batch(
-                defn, [t.query.params for t in run],
-                count_only=[t.query.count_only for t in run])
-        except Exception as e:
-            self._fail(run, e)
-            return group
-        self.stats["executed"] += 1
-        self.stats["fused_batches"] += 1
-        self.stats["fused_tickets"] += len(run)
-        for t, r in zip(run, results):
-            r.meta["plan"] = t.plan
-            # the cached copy drops 'fused' — it describes THIS run, and
-            # a later hit replaying it would claim a fusion that never
-            # happened for that caller (the ticket keeps the full meta)
-            cached = dataclasses.replace(
-                r, meta={k: v for k, v in r.meta.items() if k != "fused"})
-            self._cache_put(self._result_key(ctx, t.query), cached)
-            self._finish(t, r)
-        self._log(engine, "batch", run, fused=True,
-                  algorithm=defn.name)
-        return group

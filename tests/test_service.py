@@ -487,8 +487,9 @@ def test_pending_tickets_survive_remove_and_rebind(graph, sym_graph):
 
 def test_failing_execution_fails_ticket_not_drain(graph):
     """An execution error must not strand its ticket or abort the rest
-    of the queue: the ticket finishes 'failed', result() re-raises, and
-    every other ticket still completes."""
+    of the queue: the ticket dead-letters (a schema ValueError is
+    permanent — no retries burned), result() re-raises, and every
+    other ticket still completes."""
     svc = _batch_service(graph)
     # missing required param: planning tolerates it (partial validate),
     # execution raises in the engine's schema check
@@ -497,8 +498,10 @@ def test_failing_execution_fails_ticket_not_drain(graph):
     finished = svc.drain()
     assert {t.ticket_id for t in finished} == {bad.ticket_id,
                                                good.ticket_id}
-    assert bad.status == "failed" and good.status == "done"
+    assert bad.status == "dead-letter" and good.status == "done"
+    assert bad.attempts == 1                 # permanent error: no retry
     assert svc.stats["failed"] == 1
+    assert svc.stats["dead_letters"] == 1
     assert not svc.pending()
     with pytest.raises(ValueError, match="missing required parameter"):
         svc.result(bad)
