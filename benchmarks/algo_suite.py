@@ -101,6 +101,7 @@ def run(out=print, samples=None):
                     stats, spec, profile=P.CalibrationProfile())
                 if np.isfinite(modeled):
                     samples.setdefault(name, []).append((t_local, modeled))
+            var_times = {}
             for var in sorted(defn.variants or ()):
                 # each execution strategy timed on its own; the bitset
                 # path at 20k V is exactly the pre-ELL-intersect wall
@@ -110,6 +111,14 @@ def run(out=print, samples=None):
                 _assert_same(f"{name}:{var}", r_local, r_var)
                 out(csv_row(f"algo_suite/{name}_{var}_v{n_vertices}",
                             t_var))
+                var_times[var] = t_var
+            if samples is not None and {"dense", "fused",
+                                        "frontier"} <= set(var_times):
+                # superstep strategies: measured wall ratios vs the
+                # dense oracle calibrate the per-variant edge-bytes
+                # factors (`planner.superstep_specs`)
+                samples.setdefault("_superstep_times", []).append(
+                    var_times)
             if "distributed" in defn.engines:
                 t_dist, r_dist = time_fn(
                     lambda: dists[sym].run(defn, params).value)
@@ -192,6 +201,21 @@ def emit_calibration(path, samples, out=print) -> P.CalibrationProfile:
     if count_times:
         kwargs["interactive_threshold_s"] = float(
             max(10.0 * max(count_times), 1e-3))
+    superstep = samples.get("_superstep_times") or []
+    if superstep:
+        # per-variant edge-bytes factor anchored to the dense oracle:
+        # factor_v = dense_factor * median(t_v / t_dense) across the
+        # sweep — on a CPU host the frontier's scatter loop can fit
+        # *above* 1.0, which is exactly the feedback that keeps the
+        # planner from picking it where it does not pay off
+        fitted = {"dense": P._SUPERSTEP_EDGE_BYTES["dense"]}
+        for var in ("fused", "frontier"):
+            ratios = sorted(vt[var] / vt["dense"] for vt in superstep
+                            if vt["dense"] > 0)
+            if ratios:
+                fitted[var] = float(fitted["dense"]
+                                    * np.median(ratios))
+        kwargs["superstep_edge_bytes"] = fitted
     profile = P.CalibrationProfile(
         algo_time_scale=scales, source="benchmarks/algo_suite.py", **kwargs)
     profile.to_json(path)

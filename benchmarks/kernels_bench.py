@@ -21,6 +21,8 @@ from benchmarks.common import time_fn, csv_row
 from repro.core import graph as G
 from repro.data import synthetic as S
 from repro.kernels.ell_combine.ops import ell_spmv, ell_spmv_ref
+from repro.kernels.pregel_superstep import (fused_superstep,
+                                            fused_superstep_ref)
 from repro.models.layers import attn_chunked, attn_ref
 
 
@@ -68,6 +70,27 @@ def run(out=print):
     out(csv_row("kernels/attn_chunked_s1024", t_chk,
                 f"ratio={t_ref / t_chk:.2f}x"))
 
+    # --- fused superstep layouts ------------------------------------------
+    # dense path's superstep (gather -> [E] msgs -> segment-min) vs the
+    # fused ELL gather+combine the pregel_superstep kernel packages
+    @jax.jit
+    def superstep_coo(x):
+        msgs = x[jnp.clip(coo.src, 0, n - 1)] + coo.w
+        return jax.ops.segment_min(msgs, coo.dst,
+                                   num_segments=n + 1)[:n]
+
+    @jax.jit
+    def superstep_fused(x):
+        return fused_superstep_ref(ell.nbr, ell.mask, ell.w, x,
+                                   message=lambda s, w_: s + w_,
+                                   op="min", identity=float("inf"))
+
+    t_coo, _ = time_fn(superstep_coo, x)
+    t_fus, _ = time_fn(superstep_fused, x)
+    out(csv_row("kernels/superstep_coo_segmin", t_coo, f"E={coo.n_edges}"))
+    out(csv_row("kernels/superstep_fused_ell", t_fus,
+                f"ratio={t_coo / t_fus:.2f}x"))
+
     # --- Pallas kernels, interpret correctness ping -----------------------
     nbr = jnp.asarray(rng.integers(0, 256, (256, 128)), jnp.int32)
     mask = jnp.asarray(rng.random((256, 128)) < 0.5)
@@ -77,6 +100,15 @@ def run(out=print):
     want = ell_spmv_ref(nbr, mask, w, xx, op="sum")
     err = float(jnp.max(jnp.abs(got - want)))
     out(csv_row("kernels/pallas_ell_interpret", 0.0, f"maxerr={err:.2e}"))
+    sgot = fused_superstep(nbr, mask, w, xx,
+                           message=lambda s, w_: s + w_, op="min",
+                           identity=float("inf"), use_pallas=True)
+    swant = fused_superstep_ref(nbr, mask, w, xx,
+                                message=lambda s, w_: s + w_, op="min",
+                                identity=float("inf"))
+    serr = float(jnp.max(jnp.abs(sgot - swant)))
+    out(csv_row("kernels/pallas_superstep_interpret", 0.0,
+                f"maxerr={serr:.2e}"))
     return rows
 
 

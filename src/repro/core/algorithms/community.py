@@ -77,12 +77,23 @@ def _lpa_spec(n_channels: int, self_weight: float) -> PregelSpec:
                             | ((best_w == cur_w) & (cand < lbl)))
         return jnp.where(adopt, cand, lbl)
 
+    # Superstep-strategy declaration: LPA opts *out* of every fast
+    # path.  The message gathers a [E, 2C] structured tensor (not
+    # elementwise), the (sum ⊕ min) grouped monoid has no single
+    # scatter op (no fused/frontier variant), and the mass channels are
+    # an inexact float sum, so a reduced-precision message channel is
+    # rejected by ``check_precision`` (allow_inexact_sum stays False).
+    # Label adoption is also not a monotone fold of the aggregate —
+    # dense is the only exact execution.
     return PregelSpec(
         message=message,
         combine=(("sum", C), ("min", C)),
         apply=apply,
         identity=(0.0, float("inf")),
         halt=converged_halt,
+        elementwise_message=False,
+        frontier_mode=None,
+        allow_inexact_sum=False,
     )
 
 

@@ -42,12 +42,19 @@ def _cc_apply_jump(lbl, agg, ids, gval):
     return jnp.minimum(new, new[jnp.clip(new, 0, new.shape[0] - 1)])
 
 
+# Hash-to-min is a monotone min fold, so frontier compression is exact;
+# the default activity predicate (state != identity) marks every vertex
+# active in round 1, as labels start at their own vertex id.  Pointer
+# jumping lives in ``apply``, which every superstep strategy runs
+# densely — the frontier only prunes *message* work.
 _CC_SPEC = PregelSpec(message=_cc_message, combine="min", apply=_cc_apply,
-                      identity=np.iinfo(np.int32).max, halt=converged_halt)
+                      identity=np.iinfo(np.int32).max, halt=converged_halt,
+                      elementwise_message=True, frontier_mode="monotone")
 _CC_SPEC_JUMP = PregelSpec(message=_cc_message, combine="min",
                            apply=_cc_apply_jump,
                            identity=np.iinfo(np.int32).max,
-                           halt=converged_halt)
+                           halt=converged_halt, elementwise_message=True,
+                           frontier_mode="monotone")
 
 
 def connected_components(
@@ -95,13 +102,29 @@ def _engine_run(eng, max_iters):
         accelerated=eng.n_model == 1)
 
 
-def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+def _cc_variant(mode):
+    """Superstep-variant runner: same spec/init choices as
+    ``connected_components``, dispatched through the engine's superstep
+    choke point (which falls back to dense when unsupported)."""
+    def run(eng, max_iters):
+        sharded = eng.sharded
+        replicated = sharded.n_model == 1
+        spec = _CC_SPEC_JUMP if replicated else _CC_SPEC
+        init = jnp.arange(sharded.n_pad, dtype=jnp.int32)
+        labels, iters = eng.run_superstep(spec, init, max_iters,
+                                          variant=mode)
+        return labels[: eng.coo.n_vertices], int(iters)
+    return run
+
+
+def _cost(g: P.GraphStats, params: dict, count_only: bool):
     # pointer-jumping converges in O(log d) rounds; honour a tighter
     # user-supplied cap (the planner must not cost a 4-superstep query
     # at the analytic 16)
     iters = min(16, params.get("max_iters") or 16)
-    return P.QuerySpec("connected_components",
-                       1 if count_only else g.n_vertices, iterations=iters)
+    return P.superstep_specs("connected_components",
+                             output_rows=1 if count_only else g.n_vertices,
+                             iterations=iters)
 
 
 R.register(R.AlgorithmDef(
@@ -113,6 +136,9 @@ R.register(R.AlgorithmDef(
     count=num_components,
     count_method="num_components",
     cost=_cost,
+    variants={"dense": _cc_variant("dense"),
+              "fused": _cc_variant("fused"),
+              "frontier": _cc_variant("frontier")},
     requires_symmetric=True,
     doc="Hash-to-min label propagation with pointer-jumping acceleration.",
 ))

@@ -35,15 +35,28 @@ def _relax_apply(dist, agg, ids, gval):
     return jnp.minimum(dist, agg)
 
 
+def _finite_frontier(dist):
+    """Activity predicate: only a vertex with a finite distance can
+    improve a neighbor (inf + cost == inf is a no-op under min)."""
+    return jnp.isfinite(dist)
+
+
+# Both relaxations declare the full superstep-variant contract: the
+# message is elementwise in (src_state, w); the min fold makes frontier
+# compression *exact* ('monotone' — an unchanged source already
+# delivered its message, and apply folded it into state permanently);
+# and min tolerates reduced-precision message channels by construction.
 _BFS_SPEC = PregelSpec(
     message=lambda d, w: d + 1.0,
     combine="min", apply=_relax_apply, identity=float("inf"),
-    halt=converged_halt)
+    halt=converged_halt, elementwise_message=True,
+    frontier_mode="monotone", frontier_init=_finite_frontier)
 
 _SSSP_SPEC = PregelSpec(
     message=lambda d, w: d + w,
     combine="min", apply=_relax_apply, identity=float("inf"),
-    halt=converged_halt)
+    halt=converged_halt, elementwise_message=True,
+    frontier_mode="monotone", frontier_init=_finite_frontier)
 
 
 def _init_distances(sources, V: int, n_pad: int) -> jnp.ndarray:
@@ -147,8 +160,11 @@ def _relax_batch(spec, eng, source_sets, max_iters):
                    dtype=np.float32)
     for b, sources in enumerate(source_sets):
         init[np.asarray(sources, dtype=np.int64), b] = 0.0
-    dist, iters = run_pregel(batched_spec(spec), eng.sharded,
-                             jnp.asarray(init), mi, mesh=eng.mesh)
+    # batched_spec propagates the superstep-variant declarations, so the
+    # fused batch rides the frontier/fused path where supported — still
+    # bit-identical per column (min is exact under any strategy).
+    dist, iters = eng.run_superstep(batched_spec(spec), jnp.asarray(init),
+                                    mi, variant="auto")
     values = [dist[:V, b] for b in range(len(source_sets))]
     return values, int(iters), {"pregel_calls": 1}
 
@@ -169,18 +185,20 @@ def _relax_fuse_key(params):
     return ("max_iters", params["max_iters"])
 
 
-def _bfs_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+def _bfs_cost(g: P.GraphStats, params: dict, count_only: bool):
     # small-world graphs: effective diameter ~ a dozen supersteps
     iters = min(12, params.get("max_iters") or 12)
-    return P.QuerySpec("bfs", 1 if count_only else g.n_vertices,
-                       iterations=iters, state_bytes_per_vertex=4.0)
+    return P.superstep_specs("bfs",
+                             output_rows=1 if count_only else g.n_vertices,
+                             iterations=iters, state_bytes_per_vertex=4.0)
 
 
-def _sssp_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+def _sssp_cost(g: P.GraphStats, params: dict, count_only: bool):
     # weighted relaxation settles slower than hop distance
     iters = min(24, params.get("max_iters") or 24)
-    return P.QuerySpec("sssp", 1 if count_only else g.n_vertices,
-                       iterations=iters, state_bytes_per_vertex=4.0)
+    return P.superstep_specs("sssp",
+                             output_rows=1 if count_only else g.n_vertices,
+                             iterations=iters, state_bytes_per_vertex=4.0)
 
 
 R.register(R.AlgorithmDef(
@@ -194,6 +212,7 @@ R.register(R.AlgorithmDef(
     count=reachable_count,
     count_method="reachable_count",
     cost=_bfs_cost,
+    variants=R.superstep_variants(_BFS_SPEC),
     batch_runner=_bfs_batch,
     fuse=_relax_fuse_key,
     example_params={"sources": (0,)},
@@ -209,6 +228,7 @@ R.register(R.AlgorithmDef(
         R.Param("max_iters", None, check=lambda n: n >= 1, normalize=int),
     ),
     cost=_sssp_cost,
+    variants=R.superstep_variants(_SSSP_SPEC),
     batch_runner=_sssp_batch,
     fuse=_relax_fuse_key,
     example_params={"source": 0},

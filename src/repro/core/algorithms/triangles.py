@@ -160,10 +160,17 @@ def _kcore_spec(k: int) -> PregelSpec:
         # peeling is monotone: once dropped, never resurrected
         return jnp.where(alive > 0.5, (deg >= k).astype(jnp.float32), 0.0)
 
+    # The 0/1 aliveness sum is integer-valued in f32 (exact for degrees
+    # < 2^24), so 'delta' frontier compression is exact: changed
+    # vertices scatter msg(new) - msg(old) into a carried aggregate.
+    # Reduced-precision channels stay *off* (no allow_inexact_sum):
+    # bf16 cannot represent degrees above 256 exactly, which would break
+    # the bit-parity contract between variants.
     return PregelSpec(
         message=lambda alive, w: alive,
         combine="sum", apply=apply, identity=0.0,
-        halt=converged_halt)
+        halt=converged_halt, elementwise_message=True,
+        frontier_mode="delta")
 
 
 def k_core(
@@ -263,10 +270,25 @@ def _kcore_run(eng, k, max_iters):
                   sharded=eng.sharded)
 
 
-def _kcore_cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
+def _kcore_variant(mode):
+    """Superstep-variant runner: same init as ``k_core``, dispatched
+    through the engine's superstep choke point."""
+    def run(eng, k, max_iters):
+        G.require_symmetric(eng.coo, "k_core")
+        V = eng.coo.n_vertices
+        mi = max_iters if max_iters is not None else V
+        init = jnp.ones(eng.sharded.n_pad, jnp.float32)
+        alive, iters = eng.run_superstep(_kcore_spec(int(k)), init, mi,
+                                         variant=mode)
+        return alive[:V] > 0.5, int(iters)
+    return run
+
+
+def _kcore_cost(g: P.GraphStats, params: dict, count_only: bool):
     iters = min(10, params.get("max_iters") or 10)
-    return P.QuerySpec("k_core", 1 if count_only else g.n_vertices,
-                       iterations=iters, state_bytes_per_vertex=4.0)
+    return P.superstep_specs("k_core",
+                             output_rows=1 if count_only else g.n_vertices,
+                             iterations=iters, state_bytes_per_vertex=4.0)
 
 
 R.register(R.AlgorithmDef(
@@ -279,6 +301,9 @@ R.register(R.AlgorithmDef(
     count=core_size,
     count_method="k_core_size",
     cost=_kcore_cost,
+    variants={"dense": _kcore_variant("dense"),
+              "fused": _kcore_variant("fused"),
+              "frontier": _kcore_variant("frontier")},
     requires_symmetric=True,
     example_params={"k": 3},
     doc="k-core membership via degree peeling to fixpoint.",

@@ -34,8 +34,21 @@ from repro.core import graph as G
 from repro.core import planner as P
 from repro.core import registry as R
 from repro.core.partition import ShardedCOO, partition
-from repro.core.pregel import PregelSpec, run_pregel
+from repro.core.pregel import (
+    PregelSpec,
+    SuperstepVariant,
+    run_pregel,
+    run_pregel_frontier,
+    run_pregel_fused,
+)
 from repro.kernels.ell_combine import ops as ell_ops
+
+# Byte budget for the *uncapped* ELL layouts the fused/frontier superstep
+# variants execute over (every edge retained — no MaxAdjacentNodes cap,
+# else results would diverge from the dense oracle).  A star graph makes
+# the uncapped width V and the layout O(V^2); past this budget the
+# variants silently fall back to the dense path.
+SUPERSTEP_ELL_BUDGET = 512 * 1024 * 1024
 
 
 @dataclasses.dataclass
@@ -61,6 +74,9 @@ class Engine:
         self._sharded: Optional[ShardedCOO] = None
         self._ell: Optional[G.GraphELL] = None
         self._oriented: Optional[G.OrientedELL] = None
+        # Uncapped ELL layouts for the fused ('in') and frontier ('out')
+        # superstep variants, built lazily per direction.
+        self._superstep_ell: dict = {}
         # Per-algorithm memo: runners stash reusable derived state here
         # (PageRank's normalized partition, HITS' doubled-graph shards).
         self.cache: dict = {}
@@ -128,6 +144,109 @@ class Engine:
                     self._measured["oriented_width"] = \
                         self._oriented.max_out_degree
             return self._oriented
+
+    def _measured_degree(self, direction: str) -> int:
+        """True (uncapped) max in- or out-degree, computed host-side
+        once and cached — sizes the superstep ELL layouts and feeds the
+        planner's measured stats."""
+        key = "max_degree" if direction == "in" else "max_out_degree"
+        with self._meta_lock:
+            v = self._measured.get(key)
+        if v is None:
+            coo = self.coo
+            col = coo.dst if direction == "in" else coo.src
+            arr = np.asarray(col)[: coo.n_edges]
+            v = int(np.bincount(arr, minlength=coo.n_vertices).max()) \
+                if arr.size else 0
+            with self._meta_lock:
+                self._measured[key] = v
+        return v
+
+    def superstep_ell(self, direction: str) -> G.GraphELL:
+        """Uncapped ELL layout for the superstep variants: ``'in'`` for
+        the fused kernel (row v = sources into v), ``'out'`` for the
+        frontier scan (row u = destinations of u).  Every edge retained
+        — the variants must be bit-identical to the dense oracle, so
+        the MaxAdjacentNodes cap of ``self.ell`` does not apply.
+        ``superstep_supported`` gates on the byte budget before this is
+        built."""
+        with self._exec_lock:
+            got = self._superstep_ell.get(direction)
+            if got is None:
+                coo = self.coo
+                src = np.asarray(coo.src)[: coo.n_edges]
+                dst = np.asarray(coo.dst)[: coo.n_edges]
+                w = np.asarray(coo.w)[: coo.n_edges]
+                kmax = max(self._measured_degree(direction), 1)
+                got = G.build_ell(src, dst, coo.n_vertices, kmax, w=w,
+                                  direction=direction)
+                self._superstep_ell[direction] = got
+            return got
+
+    def superstep_supported(self, spec: PregelSpec, variant: str) -> bool:
+        """Do this engine + spec satisfy the variant's preconditions?
+
+        Dense always holds.  Fused/frontier need: single-device vertex
+        state (no mesh, no model sharding), an elementwise single-monoid
+        message, and an uncapped ELL within the byte budget; frontier
+        additionally needs a declared (and matching) ``frontier_mode``.
+        """
+        if variant == "dense":
+            return True
+        if variant not in ("fused", "frontier"):
+            raise ValueError(f"unknown superstep variant {variant!r}")
+        if self.mesh is not None or self.n_model > 1:
+            return False
+        if (not spec.elementwise_message or spec.needs_dst_state
+                or isinstance(spec.combine, tuple)):
+            return False
+        V = self.coo.n_vertices
+        if V == 0:
+            return False
+        if variant == "frontier":
+            if spec.frontier_mode == "monotone":
+                if spec.combine not in ("min", "max"):
+                    return False
+            elif spec.frontier_mode == "delta":
+                if spec.combine != "sum":
+                    return False
+            else:
+                return False
+        direction = "in" if variant == "fused" else "out"
+        kmax = max(self._measured_degree(direction), 1)
+        return V * kmax * 9 <= SUPERSTEP_ELL_BUDGET
+
+    def run_superstep(self, spec: PregelSpec, init_state, max_iters: int,
+                      variant: Optional[str] = None):
+        """Single dispatch point for superstep execution strategies.
+
+        ``'dense'``/``None`` is the existing gather/segment-combine path
+        (``run_pregel`` — the correctness oracle).  ``'fused'`` runs the
+        ELL-blocked fused kernel, ``'frontier'`` the packed active-list
+        loop; both fall back to dense when ``superstep_supported`` says
+        no, so a planner-forced variant never errors and the variants
+        contract (identical results everywhere) holds unconditionally.
+        ``'auto'`` prefers frontier, then fused, then dense.
+        """
+        v = variant or "dense"
+        if v == "auto":
+            if self.superstep_supported(spec, "frontier"):
+                v = "frontier"
+            elif self.superstep_supported(spec, "fused"):
+                v = "fused"
+            else:
+                v = "dense"
+        if v == "fused" and self.superstep_supported(spec, "fused"):
+            V = self.coo.n_vertices
+            return run_pregel_fused(
+                spec, self.superstep_ell("in"), init_state[:V], max_iters,
+                use_pallas=getattr(self, "use_pallas", False))
+        if v == "frontier" and self.superstep_supported(spec, "frontier"):
+            V = self.coo.n_vertices
+            return run_pregel_frontier(
+                spec, self.superstep_ell("out"), init_state[:V], max_iters)
+        return run_pregel(spec, self.sharded, init_state, max_iters,
+                          mesh=self.mesh)
 
     def measurements(self) -> dict:
         """Measured graph structure observed so far (only fields whose
@@ -236,6 +355,12 @@ class Engine:
         return best.variant
 
     def _invoke(self, runner, defn: R.AlgorithmDef, params: dict):
+        if isinstance(runner, SuperstepVariant):
+            state, max_iters = defn.init(self, params)
+            state, iters = self.run_superstep(runner.spec, state,
+                                              max_iters,
+                                              variant=runner.mode)
+            return state[: self.coo.n_vertices], int(iters)
         if isinstance(runner, PregelSpec):
             state, max_iters = defn.init(self, params)
             state, iters = run_pregel(runner, self.sharded, state,

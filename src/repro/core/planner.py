@@ -47,6 +47,15 @@ LOCAL_DISPATCH_S = 2e-4   # jitted query launch
 DIST_STEP_S = 1.5e-3      # per-superstep launch + sync on a mesh
 LOCAL_MEM_BUDGET = 12e9   # usable HBM for the local engine's graph
 
+# Analytic per-superstep edge-traffic multipliers for the superstep
+# execution variants (relative to the dense gather/segment-combine
+# path's raw edge bytes).  The fused kernel streams the same edges but
+# skips the [E] message materialization and the segment-sort; the
+# frontier path touches only edges incident to active vertices —
+# averaged over a BFS-like run the active fraction is small.  A fitted
+# CalibrationProfile (``superstep_edge_bytes``) overrides these.
+_SUPERSTEP_EDGE_BYTES = {"dense": 1.0, "fused": 0.75, "frontier": 0.15}
+
 
 @dataclasses.dataclass(frozen=True)
 class GraphStats:
@@ -64,6 +73,7 @@ class GraphStats:
     bytes_coo: int
     max_degree: Optional[int] = None
     oriented_width: Optional[int] = None
+    max_out_degree: Optional[int] = None
 
     @classmethod
     def of(cls, graph) -> "GraphStats":
@@ -72,7 +82,7 @@ class GraphStats:
     def with_measurements(self, meas: Mapping[str, int]) -> "GraphStats":
         """Stats with measured fields merged in (unknown keys rejected,
         ``None`` values ignored)."""
-        fields = {"max_degree", "oriented_width"}
+        fields = {"max_degree", "oriented_width", "max_out_degree"}
         unknown = sorted(set(meas) - fields)
         if unknown:
             raise ValueError(f"unknown measurement(s) {unknown}")
@@ -108,14 +118,26 @@ class CalibrationProfile:
     admission_budget_s: float = float("inf")
     algo_time_scale: Mapping[str, float] = dataclasses.field(
         default_factory=dict)
+    # Per-superstep edge-traffic multipliers for the superstep execution
+    # variants (overrides of _SUPERSTEP_EDGE_BYTES; fitted by
+    # ``benchmarks/algo_suite.py --emit-calibration`` from per-variant
+    # timings).
+    superstep_edge_bytes: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
     source: str = "analytic-defaults"
 
     def scale(self, algorithm: str) -> float:
         return float(self.algo_time_scale.get(algorithm, 1.0))
 
+    def superstep_factor(self, variant: str) -> float:
+        """Edge-bytes multiplier for a superstep variant."""
+        base = _SUPERSTEP_EDGE_BYTES.get(variant, 1.0)
+        return float(self.superstep_edge_bytes.get(variant, base))
+
     def to_json(self, path) -> None:
         d = dataclasses.asdict(self)
         d["algo_time_scale"] = dict(self.algo_time_scale)
+        d["superstep_edge_bytes"] = dict(self.superstep_edge_bytes)
         if d["admission_budget_s"] == float("inf"):
             d["admission_budget_s"] = None        # JSON has no inf
         with open(path, "w") as f:
@@ -135,6 +157,9 @@ class CalibrationProfile:
         d["algo_time_scale"] = {
             str(k): float(v)
             for k, v in (d.get("algo_time_scale") or {}).items()}
+        d["superstep_edge_bytes"] = {
+            str(k): float(v)
+            for k, v in (d.get("superstep_edge_bytes") or {}).items()}
         return cls(**d)
 
 
@@ -193,6 +218,27 @@ class QuerySpec:
     state_bytes_per_vertex: float = 8.0
     edge_bytes_factor: float = 1.0
     variant: Optional[str] = None
+
+
+def superstep_specs(algorithm: str, *, output_rows: int, iterations: int,
+                    row_bytes: int = 8, state_bytes_per_vertex: float = 8.0,
+                    frontier: bool = True) -> tuple:
+    """Per-variant QuerySpecs for a superstep-variant algorithm.
+
+    One spec per execution strategy (dense / fused / frontier), differing
+    only in ``edge_bytes_factor`` — the active profile's per-variant
+    multiplier.  Dense comes first so cost ties keep the oracle path
+    (``choose_plan`` prefers earlier specs on ties).
+    """
+    pr = _ACTIVE_PROFILE
+    names = ("dense", "fused", "frontier") if frontier \
+        else ("dense", "fused")
+    return tuple(
+        QuerySpec(algorithm, output_rows, iterations=iterations,
+                  row_bytes=row_bytes,
+                  state_bytes_per_vertex=state_bytes_per_vertex,
+                  edge_bytes_factor=pr.superstep_factor(v), variant=v)
+        for v in names)
 
 
 @dataclasses.dataclass

@@ -71,6 +71,38 @@ class PregelSpec:
               hub/authority sums by their own L2 norms inside the loop,
               making the whole algorithm one XLA program).
 
+    Execution-strategy declarations (all optional; defaults keep the
+    dense gather/segment-combine path, which remains the correctness
+    oracle):
+
+    elementwise_message : the message is pure elementwise jnp code in
+              ``(src_state, w)`` and shape-polymorphic — callable on
+              ``[E]`` edge vectors (dense path) and ``[V, K]`` gathered
+              ELL tiles (fused kernel) alike.  Prerequisite for the
+              fused and frontier variants.
+    frontier_mode : how sparse-active supersteps may skip inactive
+              vertices.  ``'monotone'`` (min/max combines whose apply
+              folds the aggregate into state with the same monoid —
+              BFS/SSSP/CC): a source unchanged since round t already
+              delivered its identical message then, and the fold made
+              it permanent, so omitting it is a no-op.  ``'delta'``
+              (sum combines with integer-valued messages — k-core): a
+              running aggregate is carried and changed sources scatter
+              ``msg(new) - msg(old)``.  Both are *exact* — bit-identical
+              trajectories to the dense path — under those conditions.
+    frontier_init : optional ``state -> bool[V]`` activity predicate
+              for the first frontier (monotone mode); default is
+              ``state != identity``.  Must be a module-level callable
+              (it keys jit caches).
+    message_dtype : reduced-precision message channel ('bfloat16' /
+              'float16').  Messages are cast to this dtype right after
+              the edge program, before the combine — halving message
+              traffic.  min/max monoids always tolerate this (per-
+              message rounding only); sum monoids reorder inexact
+              accumulation and require ``allow_inexact_sum``.
+    allow_inexact_sum : explicit opt-in for ``message_dtype`` on a sum
+              monoid (the result is then approximate).
+
     Vertex state may be 1-D ``[Vl]`` or N-D ``[Vl, ...]`` (triangle
     counting keeps a packed neighborhood bitset per vertex); padding-slot
     freezing broadcasts over the trailing axes.
@@ -84,6 +116,60 @@ class PregelSpec:
     global_value: Optional[Callable[[Array, Array, Array], Array]] = None
     needs_dst_state: bool = False
     global_over_agg: bool = False
+    elementwise_message: bool = False
+    frontier_mode: Optional[str] = None
+    frontier_init: Optional[Callable[[Array], Array]] = None
+    message_dtype: Optional[str] = None
+    allow_inexact_sum: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepVariant:
+    """A planner-visible execution strategy for a PregelSpec runner.
+
+    Registered in an AlgorithmDef's ``variants`` mapping next to the
+    dense spec (the triangle_count bitset-vs-intersect idiom), so the
+    cost model picks dense vs fused vs frontier per graph.  Engines
+    dispatch it through ``Engine.run_superstep`` — which silently falls
+    back to the dense path when the strategy's preconditions don't hold
+    on that engine, keeping the variants contract (identical results on
+    every variant) unconditional.
+    """
+
+    spec: PregelSpec
+    mode: str  # 'fused' | 'frontier'
+
+
+def check_precision(spec: PregelSpec) -> None:
+    """Validate the reduced-precision declaration of a spec.
+
+    min/max monoids are always safe (rounding is per-message; the
+    combine itself is exact in any order).  Inexact sums are only
+    allowed behind the explicit opt-in, and structured (grouped-monoid)
+    messages can't take a single channel dtype at all.
+    """
+    if spec.message_dtype is None:
+        return
+    if isinstance(spec.combine, tuple):
+        raise ValueError(
+            "message_dtype: structured (grouped-monoid) messages do not "
+            "support a reduced-precision channel")
+    if spec.combine == "sum" and not spec.allow_inexact_sum:
+        raise ValueError(
+            "message_dtype with a 'sum' monoid accumulates rounding "
+            "error; opt in explicitly with allow_inexact_sum=True")
+
+
+def reduced_precision(spec: PregelSpec, dtype,
+                      allow_inexact_sum: Optional[bool] = None) -> PregelSpec:
+    """Derive a spec whose message channel runs in ``dtype``."""
+    s = dataclasses.replace(
+        spec, message_dtype=jnp.dtype(dtype).name,
+        allow_inexact_sum=(spec.allow_inexact_sum
+                           if allow_inexact_sum is None
+                           else allow_inexact_sum))
+    check_precision(s)
+    return s
 
 
 def converged_halt(old, new, valid):
@@ -140,11 +226,23 @@ def batched_spec(spec: PregelSpec) -> PregelSpec:
         def gval(state, ids, valid):
             return per_col_g(state, ids, valid)
 
+    # activity is per-vertex: a vertex is active if ANY column is (the
+    # frontier loop reduces trailing axes with `any` after this)
+    frontier_init = None
+    if spec.frontier_init is not None:
+        frontier_init = jax.vmap(spec.frontier_init, in_axes=-1,
+                                 out_axes=-1)
+
     return PregelSpec(
         message=message, combine=spec.combine, apply=apply_,
         identity=spec.identity, halt=halt, global_value=gval,
         needs_dst_state=spec.needs_dst_state,
-        global_over_agg=spec.global_over_agg)
+        global_over_agg=spec.global_over_agg,
+        elementwise_message=spec.elementwise_message,
+        frontier_mode=spec.frontier_mode,
+        frontier_init=frontier_init,
+        message_dtype=spec.message_dtype,
+        allow_inexact_sum=spec.allow_inexact_sum)
 
 
 _SEG = {
@@ -263,6 +361,7 @@ def run_pregel(
     With ``mesh=None`` runs the same program on one device (the engine the
     planner picks for medium graphs still shares this code path).
     """
+    check_precision(spec)
     V = sg.n_vertices
     v_local = sg.v_local
     sharded = sg.vertex_layout == "sharded"
@@ -289,6 +388,8 @@ def run_pregel(
                 msgs = spec.message(src_state, w, dst_state)
             else:
                 msgs = spec.message(src_state, w)
+            if spec.message_dtype is not None:
+                msgs = msgs.astype(spec.message_dtype)
             agg = _local_combine(msgs, dst, V, v_local, start,
                                  spec.combine, spec.identity)
             if dist:
@@ -357,3 +458,260 @@ def run_pregel(
         _jit_cache_put(key, fn)
     with mesh:
         return fn(sg.src, sg.dst, sg.w, init_state)
+
+
+def _check_superstep_spec(spec: PregelSpec, what: str) -> None:
+    check_precision(spec)
+    if not spec.elementwise_message:
+        raise ValueError(f"{what}: spec does not declare "
+                         "elementwise_message")
+    if spec.needs_dst_state:
+        raise ValueError(f"{what}: two-endpoint edge programs are "
+                         "dense-path only")
+    if isinstance(spec.combine, tuple):
+        raise ValueError(f"{what}: structured (grouped-monoid) messages "
+                         "are dense-path only")
+
+
+def run_pregel_fused(
+    spec: PregelSpec,
+    ell,
+    init_state: Array,
+    max_iters: int,
+    use_pallas: bool = False,
+    block_rows: int = 512,
+):
+    """Run the vertex program with the fused-superstep kernel.
+
+    Same contract and return value as ``run_pregel`` on a single
+    device, but each superstep is one pass over the in-neighbor ELL
+    layout (``kernels/pregel_superstep``): gather src state → edge
+    program → monoid combine into dst rows, with no [E] message tensor
+    and no separate segment-combine launch.  Bit-identical to the dense
+    path for min/max monoids and integer-valued sums (the only specs
+    registered with this variant).
+
+    ``ell`` is the uncapped ``direction='in'`` layout over the full
+    graph (every edge retained; the engine builds and caches it).
+    """
+    from repro.kernels.pregel_superstep import ops as superstep_ops
+
+    _check_superstep_spec(spec, "run_pregel_fused")
+    V = ell.n_vertices
+    if init_state.shape[0] != V:
+        raise ValueError("run_pregel_fused: state must be unpadded [V]")
+
+    def body(nbr, mask, w, state):
+        ids = jnp.arange(V, dtype=jnp.int32)
+        valid = ids < V        # all True; uniform halt/global signature
+
+        def one_iter(state):
+            agg = superstep_ops.fused_superstep(
+                nbr, mask, w, state, message=spec.message,
+                op=spec.combine, identity=spec.identity,
+                message_dtype=spec.message_dtype, use_pallas=use_pallas,
+                block_rows=block_rows)
+            if spec.global_value is not None:
+                g_src = agg if spec.global_over_agg else state
+                gval = spec.global_value(g_src, ids, valid)
+            else:
+                gval = jnp.float32(0.0)
+            return spec.apply(state, agg, ids, gval)
+
+        if spec.halt is None:
+            def fori(_, s):
+                return one_iter(s)
+            final = lax.fori_loop(0, max_iters, fori, state)
+            return final, jnp.int32(max_iters)
+
+        def cond(carry):
+            _, i, done = carry
+            return jnp.logical_and(i < max_iters, jnp.logical_not(done))
+
+        def step(carry):
+            s, i, _ = carry
+            new = one_iter(s)
+            return new, i + 1, spec.halt(s, new, valid)
+
+        final, iters, _ = lax.while_loop(
+            cond, step, (state, jnp.int32(0), jnp.array(False)))
+        return final, iters
+
+    key = ("fused", spec, max_iters, V, ell.nbr.shape, use_pallas,
+           block_rows, init_state.shape, str(init_state.dtype))
+    fn, key = _jit_cache_get(key)
+    if fn is None:
+        fn = jax.jit(body)
+        _jit_cache_put(key, fn)
+    return fn(ell.nbr, ell.mask, ell.w, init_state)
+
+
+def run_pregel_frontier(
+    spec: PregelSpec,
+    ell,
+    init_state: Array,
+    max_iters: int,
+    block_rows: int = 1024,
+):
+    """Run the vertex program with frontier compression.
+
+    ``ell`` is the uncapped ``direction='out'`` layout: row ``u`` lists
+    the destinations of u's out-edges, so scanning a block of frontier
+    rows touches exactly the edges incident to active vertices.  A
+    packed active-vertex list (static capacity, dynamic count) rides
+    the ``lax.while_loop`` carry; each superstep runs an inner
+    ``fori_loop`` whose trip count is ``ceil(count / block_rows)`` —
+    per-superstep gather/scatter work is proportional to the *actual*
+    frontier, not V.
+
+    Exactness (the reason results are bit-identical to dense):
+
+    * ``'monotone'`` — the aggregate is rebuilt each round from active
+      sources only and folded into state by apply's own min/max.  A
+      source unchanged since round t delivered the same message at
+      round t and the fold made it permanent; re-delivering it is a
+      no-op.  min/max are exact in any order, so trajectories (and
+      therefore halt rounds) match dense exactly.
+    * ``'delta'`` — the full sum aggregate is carried across rounds;
+      round 1 scatters every message, later rounds scatter
+      ``msg(new) - msg(old)`` for changed sources.  Exact when messages
+      are integer-valued in their dtype (k-core's 0/1 aliveness).
+
+    The apply/halt/global_value hooks run densely over the full state,
+    so padding-free [V] semantics, iteration counts, and gval match the
+    dense path element for element.
+    """
+    _check_superstep_spec(spec, "run_pregel_frontier")
+    mode = spec.frontier_mode
+    if mode not in ("monotone", "delta"):
+        raise ValueError(f"run_pregel_frontier: spec declares no "
+                         f"frontier_mode (got {mode!r})")
+    if mode == "monotone" and spec.combine not in ("min", "max"):
+        raise ValueError("frontier_mode='monotone' requires a min/max "
+                         "combine")
+    if mode == "delta" and spec.combine != "sum":
+        raise ValueError("frontier_mode='delta' requires a 'sum' combine")
+    V = ell.n_vertices
+    K = ell.nbr.shape[1]
+    if init_state.shape[0] != V:
+        raise ValueError("run_pregel_frontier: state must be unpadded [V]")
+    B = min(block_rows, max(V, 1))
+    F = ((V + B - 1) // B) * B          # packed-frontier capacity
+    trailing = init_state.shape[1:]
+    delta = mode == "delta"
+
+    def body(nbr, msk, w, state):
+        ids = jnp.arange(V, dtype=jnp.int32)
+        valid = ids < V
+        probe = jax.eval_shape(
+            spec.message,
+            jax.ShapeDtypeStruct((1, 1) + trailing, state.dtype),
+            jax.ShapeDtypeStruct((1, 1), w.dtype))
+        agg_dtype = (jnp.dtype(spec.message_dtype)
+                     if spec.message_dtype is not None else probe.dtype)
+        agg_trailing = probe.shape[2:]
+        fill = jnp.asarray(0 if delta else spec.identity, agg_dtype)
+        scatter = {"sum": lambda a, i, v: a.at[i].add(v),
+                   "min": lambda a, i, v: a.at[i].min(v),
+                   "max": lambda a, i, v: a.at[i].max(v)}[spec.combine]
+
+        def reduce_active(ch):
+            while ch.ndim > 1:
+                ch = jnp.any(ch, axis=-1)
+            return ch
+
+        def pack(act):
+            idx = jnp.nonzero(act, size=F, fill_value=V)[0]
+            return idx.astype(jnp.int32), jnp.sum(act.astype(jnp.int32))
+
+        def scatter_frontier(acc, state, prev, frontier, count, first):
+            n_blocks = (count + B - 1) // B
+
+            def blk(j, acc):
+                fb = lax.dynamic_slice(frontier, (j * B,), (B,))
+                row = jnp.clip(fb, 0, V - 1)
+                rn = nbr[row]                  # (B, K), sentinel V
+                rm = msk[row] & (fb < V)[:, None]
+                rw = w[row]
+                src = jnp.broadcast_to(state[row][:, None],
+                                       (B, K) + trailing)
+                msgs = spec.message(src, rw)
+                if delta:
+                    prev_src = jnp.broadcast_to(prev[row][:, None],
+                                                (B, K) + trailing)
+                    pm = spec.message(prev_src, rw)
+                    msgs = msgs - jnp.where(first, jnp.zeros_like(pm), pm)
+                if spec.message_dtype is not None:
+                    msgs = msgs.astype(spec.message_dtype)
+                m = rm
+                if msgs.ndim > m.ndim:
+                    m = m.reshape(m.shape + (1,) * (msgs.ndim - m.ndim))
+                msgs = jnp.where(m, msgs.astype(agg_dtype), fill)
+                # padded/inactive slots aim at the sentinel row V
+                dst_f = jnp.where(rm, rn, V).reshape(-1)
+                mf = msgs.reshape((B * K,) + msgs.shape[2:])
+                return scatter(acc, dst_f, mf)
+
+            return lax.fori_loop(0, n_blocks, blk, acc)
+
+        def one_superstep(s, agg):
+            if spec.global_value is not None:
+                g_src = agg if spec.global_over_agg else s
+                gval = spec.global_value(g_src, ids, valid)
+            else:
+                gval = jnp.float32(0.0)
+            return spec.apply(s, agg, ids, gval)
+
+        def halt_of(s, new):
+            if spec.halt is None:
+                return jnp.array(False)
+            return spec.halt(s, new, valid)
+
+        if delta:
+            act0 = jnp.ones((V,), bool)     # round 1 seeds the full sum
+        elif spec.frontier_init is not None:
+            act0 = reduce_active(spec.frontier_init(state))
+        else:
+            act0 = reduce_active(
+                state != jnp.asarray(spec.identity, state.dtype))
+        fr0, cnt0 = pack(act0)
+
+        def cond(carry):
+            i, done = carry[-2], carry[-1]
+            return jnp.logical_and(i < max_iters, jnp.logical_not(done))
+
+        if delta:
+            acc0 = jnp.zeros((V + 1,) + agg_trailing, agg_dtype)
+
+            def step(carry):
+                s, prev, acc, fr, cnt, first, i, _ = carry
+                acc = scatter_frontier(acc, s, prev, fr, cnt, first)
+                new = one_superstep(s, acc[:V])
+                fr2, cnt2 = pack(reduce_active(new != s))
+                return (new, s, acc, fr2, cnt2, jnp.array(False),
+                        i + 1, halt_of(s, new))
+
+            carry0 = (state, state, acc0, fr0, cnt0, jnp.array(True),
+                      jnp.int32(0), jnp.array(False))
+        else:
+            def step(carry):
+                s, fr, cnt, i, _ = carry
+                acc0 = jnp.full((V + 1,) + agg_trailing, fill, agg_dtype)
+                acc = scatter_frontier(acc0, s, None, fr, cnt,
+                                       jnp.array(False))
+                new = one_superstep(s, acc[:V])
+                fr2, cnt2 = pack(reduce_active(new != s))
+                return new, fr2, cnt2, i + 1, halt_of(s, new)
+
+            carry0 = (state, fr0, cnt0, jnp.int32(0), jnp.array(False))
+
+        out = lax.while_loop(cond, step, carry0)
+        return out[0], out[-2]
+
+    key = ("frontier", spec, max_iters, V, K, B,
+           init_state.shape, str(init_state.dtype))
+    fn, key = _jit_cache_get(key)
+    if fn is None:
+        fn = jax.jit(body)
+        _jit_cache_put(key, fn)
+    return fn(ell.nbr, ell.mask, ell.w, init_state)

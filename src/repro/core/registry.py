@@ -408,3 +408,26 @@ def freeze(value: Any) -> Any:
         arr = np.asarray(value)
         return (arr.dtype.str, arr.shape, arr.tobytes())
     return value                              # trust it to be hashable
+
+
+# ---------------------------------------------------------------------------
+# Superstep execution variants
+# ---------------------------------------------------------------------------
+
+def superstep_variants(spec) -> dict:
+    """The standard ``variants`` mapping for a PregelSpec runner.
+
+    ``dense`` is the spec itself (the gather/segment-combine oracle),
+    ``fused`` the ELL-blocked fused-kernel strategy, and — when the spec
+    declares a ``frontier_mode`` — ``frontier`` the packed active-list
+    strategy.  All three produce bit-identical results (the engine falls
+    back to dense whenever a strategy's preconditions fail), so the
+    planner is free to pick per (graph, engine) from the cost hook's
+    per-variant QuerySpecs.
+    """
+    from repro.core.pregel import SuperstepVariant
+
+    out = {"dense": spec, "fused": SuperstepVariant(spec, "fused")}
+    if spec.frontier_mode is not None:
+        out["frontier"] = SuperstepVariant(spec, "frontier")
+    return out

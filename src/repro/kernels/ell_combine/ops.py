@@ -14,7 +14,10 @@ from repro.kernels.ell_combine.kernel import ell_combine_pallas
 from repro.kernels.ell_combine.ref import ell_combine_ref
 
 _LANE = 128
-VMEM_X_BUDGET = 4 * 1024 * 1024  # floats of gather source we allow in VMEM
+# Bytes of gather source we allow VMEM-resident.  Sized in bytes (not
+# element count) so dtype width and trailing state dims count against
+# the budget.
+VMEM_X_BUDGET_BYTES = 16 * 1024 * 1024
 
 
 def _on_cpu() -> bool:
@@ -29,7 +32,7 @@ def ell_spmv(nbr, mask, w, x, op: str = "sum", block_rows: int = 512):
     """Pallas path (interpret on CPU). Falls back to ref when the gather
     source exceeds the VMEM budget the kernel design assumes."""
     V, K = nbr.shape
-    if x.shape[0] > VMEM_X_BUDGET:
+    if x.size * x.dtype.itemsize > VMEM_X_BUDGET_BYTES:
         return ell_combine_ref(nbr, mask, w, x, op=op)
     vp = _round_up(max(V, block_rows), block_rows)
     kp = _round_up(K, _LANE)

@@ -1,0 +1,6 @@
+from repro.kernels.pregel_superstep.ops import (
+    fused_superstep,
+    fused_superstep_ref,
+)
+
+__all__ = ["fused_superstep", "fused_superstep_ref"]

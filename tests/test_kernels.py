@@ -9,6 +9,8 @@ import pytest
 from repro.kernels.ell_combine.ops import ell_spmv, ell_spmv_ref
 from repro.kernels.ell_intersect.ops import (
     ell_intersect, ell_intersect_rows_ref)
+from repro.kernels.pregel_superstep import fused_superstep, fused_superstep_ref
+from repro.kernels.pregel_superstep import ops as superstep_ops
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_reference
 
@@ -56,6 +58,124 @@ def test_ell_spmv_matches_dense_matmul():
     got = np.asarray(ell_spmv(jnp.asarray(nbr), jnp.asarray(mask),
                               jnp.asarray(w), jnp.asarray(x), op="sum"))
     np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ pregel_superstep
+
+def _relax(s, w):
+    return s + w
+
+
+@pytest.mark.parametrize("v,k,vx", [(64, 16, 80), (300, 37, 400),
+                                    (1024, 128, 1024), (17, 200, 33)])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_superstep_shapes(v, k, vx, op):
+    """Pallas (interpret on CPU) vs fused jnp reference over ragged
+    shapes that exercise row-block and 128-lane padding."""
+    rng = np.random.default_rng(v + k)
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < 0.7)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(vx), jnp.float32)
+    identity = 0.0 if op == "sum" else float("inf") * (1 if op == "min"
+                                                       else -1)
+    got = fused_superstep(nbr, mask, w, x, message=_relax, op=op,
+                          identity=identity)
+    want = fused_superstep_ref(nbr, mask, w, x, message=_relax, op=op,
+                               identity=identity)
+    assert got.shape == (v,)
+    if op == "sum":
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        # min/max select, they never round: bit-identical
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_superstep_empty_rows_get_fill():
+    """Vertices with no active in-edges get the dense-path fill: the
+    monoid identity for min/max, 0 for sum (segment-sum semantics)."""
+    nbr = jnp.zeros((8, 4), jnp.int32)
+    mask = jnp.zeros((8, 4), bool)
+    w = jnp.ones((8, 4), jnp.float32)
+    x = jnp.ones((16,), jnp.float32)
+    for fn in (fused_superstep, fused_superstep_ref):
+        s = np.asarray(fn(nbr, mask, w, x, message=_relax, op="sum",
+                          identity=0.0))
+        assert (s == 0).all()
+        m = np.asarray(fn(nbr, mask, w, x, message=_relax, op="min",
+                          identity=float("inf")))
+        assert np.isinf(m).all() and (m > 0).all()
+
+
+def test_superstep_sentinel_neighbors_masked_out():
+    """Padding slots point at the sentinel row (index >= V); masked off,
+    they must contribute nothing even though the gather clips them."""
+    vx = 12
+    nbr = jnp.full((4, 8), vx, jnp.int32)
+    nbr = nbr.at[0, 0].set(3)
+    mask = jnp.zeros((4, 8), bool).at[0, 0].set(True)
+    w = jnp.full((4, 8), 100.0, jnp.float32)
+    x = jnp.arange(vx, dtype=jnp.float32)
+    for fn in (fused_superstep, fused_superstep_ref):
+        got = np.asarray(fn(nbr, mask, w, x, message=_relax, op="min",
+                            identity=float("inf")))
+        assert got[0] == 103.0
+        assert np.isinf(got[1:]).all()
+
+
+def test_superstep_vmem_budget_falls_back_exact(monkeypatch):
+    """Over-budget gather source silently routes to the reference — same
+    bits out."""
+    rng = np.random.default_rng(7)
+    v, k, vx = 128, 9, 200
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < 0.6)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(vx), jnp.float32)
+    want = fused_superstep(nbr, mask, w, x, message=_relax, op="min",
+                           identity=float("inf"))
+    monkeypatch.setattr(superstep_ops, "VMEM_X_BUDGET_BYTES", 64)
+    got = fused_superstep(nbr, mask, w, x, message=_relax, op="min",
+                          identity=float("inf"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_superstep_trailing_state_dims_use_reference():
+    """[V, C] state (fused-batch programs) is out of the Pallas contract;
+    the wrapper must fall back and still reduce per-channel."""
+    rng = np.random.default_rng(11)
+    v, k, vx, c = 32, 5, 40, 3
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < 0.7)
+    w = jnp.asarray(rng.standard_normal((v, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((vx, c)), jnp.float32)
+    msg = lambda s, w_: s + w_[..., None]
+    got = fused_superstep(nbr, mask, w, x, message=msg, op="min",
+                          identity=float("inf"))
+    assert got.shape == (v, c)
+    want = fused_superstep_ref(nbr, mask, w, x, message=msg, op="min",
+                               identity=float("inf"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_superstep_message_dtype_rounds_before_combine():
+    """A bf16 channel rounds each message identically on both paths, so
+    min stays bit-identical — the mixed-precision contract."""
+    rng = np.random.default_rng(13)
+    v, k, vx = 96, 7, 96
+    nbr = jnp.asarray(rng.integers(0, vx, (v, k)), jnp.int32)
+    mask = jnp.asarray(rng.random((v, k)) < 0.7)
+    w = jnp.asarray(rng.random((v, k)), jnp.float32)
+    x = jnp.asarray(rng.random(vx), jnp.float32)
+    got = fused_superstep(nbr, mask, w, x, message=_relax, op="min",
+                          identity=float("inf"), message_dtype="bfloat16")
+    want = fused_superstep_ref(nbr, mask, w, x, message=_relax, op="min",
+                               identity=float("inf"),
+                               message_dtype="bfloat16")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
 
 
 # --------------------------------------------------------------- ell_intersect

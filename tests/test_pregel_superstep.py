@@ -1,0 +1,303 @@
+"""The fused/frontier superstep variants and their exactness contract.
+
+Covers the tentpole and its satellites:
+
+* fused-kernel (Pallas interpret + jnp ref) vs dense-loop parity for
+  every registered superstep-variant algorithm on random/star/self-loop/
+  empty graphs, on both engines;
+* frontier path bit-identical final state AND iteration counts to dense
+  on BFS/SSSP/CC (monotone) and k-core (delta);
+* mixed-precision message channels: bit-parity across strategies at
+  reduced precision, a tolerance bound vs the full-precision result, and
+  the validation gates (structured combine rejected, inexact sum behind
+  the explicit opt-in);
+* fused-batch (``batched_spec``) parity on the new path;
+* planner-visible variant selection and the unconditional dense
+  fallback (budget/mesh/spec preconditions).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engines as E
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import pregel
+from repro.core import registry as R
+from repro.core.algorithms import community, traversal
+from repro.core.algorithms.triangles import _kcore_spec
+from repro.core.engines import DistributedEngine, LocalEngine
+from repro.core.partition import partition_1d
+
+N = 250
+
+
+def _bits(v):
+    return np.asarray(v).tobytes()
+
+
+def _random_graph(n=N, seed=3):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, 6 * n)
+    dst = rng.integers(0, n, 6 * n)
+    w = rng.uniform(0.1, 2.0, 6 * n).astype(np.float32)
+    return G.build_coo(src, dst, n, w=w, symmetrize=True)
+
+
+def _star_graph(n=64):
+    leaves = np.arange(1, n)
+    return G.build_coo(np.zeros(n - 1, np.int64), leaves, n,
+                       symmetrize=True)
+
+
+def _self_loop_graph():
+    src = np.array([0, 1, 2, 0, 3, 3])
+    dst = np.array([1, 2, 0, 0, 3, 1])
+    return G.build_coo(src, dst, 4, symmetrize=True)
+
+
+def _empty_graph(n=5):
+    e = np.array([], dtype=np.int64)
+    return G.build_coo(e, e, n, symmetrize=True)
+
+
+GRAPHS = {
+    "random": _random_graph,
+    "star": _star_graph,
+    "self_loop": _self_loop_graph,
+    "empty": _empty_graph,
+}
+
+# Every registered algorithm that carries superstep variants, with
+# params valid on the smallest GRAPHS entry (V=4).
+ALGOS = [
+    ("bfs", {"sources": (0, 3)}),
+    ("sssp", {"source": 0}),
+    ("connected_components", {}),
+    ("k_core", {"k": 3}),
+]
+
+
+def _engine(kind, g):
+    if kind == "local":
+        return LocalEngine(g)
+    return DistributedEngine(g, n_data=2)
+
+
+# ------------------------------------------------------------ variant parity
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("kind", ["local", "distributed"])
+@pytest.mark.parametrize("algo,params", ALGOS)
+def test_variant_parity_every_algorithm(gname, kind, algo, params):
+    """Each registered strategy returns a bit-identical value and the
+    same iteration count as the dense oracle — graphs x engines."""
+    g = GRAPHS[gname]()
+    eng = _engine(kind, g)
+    defn = R.get(algo)
+    assert set(defn.variants) == {"dense", "fused", "frontier"}
+    base = eng.run(algo, params, variant="dense")
+    for v in sorted(defn.variants):
+        r = eng.run(algo, params, variant=v)
+        assert _bits(r.value) == _bits(base.value), (algo, v)
+        assert r.iterations == base.iterations, (algo, v)
+
+
+def test_fused_pallas_interpret_parity():
+    """use_pallas engines drive the Pallas kernel (interpret mode on
+    CPU) on the fused variant — same bits as the dense path."""
+    g = _random_graph()
+    ref = LocalEngine(g).run("bfs", {"sources": (0,)}, variant="dense")
+    eng = LocalEngine(g, use_pallas=True)
+    r = eng.run("bfs", {"sources": (0,)}, variant="fused")
+    assert _bits(r.value) == _bits(ref.value)
+    assert r.iterations == ref.iterations
+
+
+def test_frontier_loop_direct():
+    """run_pregel_frontier against run_pregel without the engine in the
+    way: same final state, same iteration count."""
+    g = _random_graph(seed=11)
+    V = g.n_vertices
+    s = np.asarray(g.src)[: g.n_edges]
+    d = np.asarray(g.dst)[: g.n_edges]
+    w = np.asarray(g.w)[: g.n_edges]
+    kout = int(np.bincount(s, minlength=V).max())
+    ell = G.build_ell(s, d, V, kout, w=w, direction="out")
+    init = jnp.full((V,), jnp.inf).at[0].set(0.0)
+    spec = traversal._SSSP_SPEC
+    dense, it_d = pregel.run_pregel(spec, partition_1d(g, 1), init, V)
+    front, it_f = pregel.run_pregel_frontier(spec, ell, init, V)
+    assert int(it_d) == int(it_f)
+    assert _bits(dense[:V]) == _bits(front)
+
+
+# ------------------------------------------------------- dense fallback
+
+def test_budget_fallback_is_exact(monkeypatch):
+    """Past the uncapped-ELL byte budget the variants silently take the
+    dense path — forced variants still return the oracle's bits."""
+    g = _star_graph(128)          # uncapped width = V-1: the worst case
+    eng = LocalEngine(g)
+    base = eng.run("connected_components", {}, variant="dense")
+    monkeypatch.setattr(E, "SUPERSTEP_ELL_BUDGET", 16)
+    spec = pregel.PregelSpec(
+        message=lambda d, w: d, combine="min",
+        apply=lambda st, a, i, gv: jnp.minimum(st, a),
+        identity=np.iinfo(np.int32).max, halt=pregel.converged_halt,
+        elementwise_message=True, frontier_mode="monotone")
+    assert not eng.superstep_supported(spec, "fused")
+    assert not eng.superstep_supported(spec, "frontier")
+    for v in ("fused", "frontier"):
+        r = eng.run("connected_components", {}, variant=v)
+        assert _bits(r.value) == _bits(base.value)
+
+
+def test_unsupported_specs_fall_back_dense():
+    g = _random_graph()
+    eng = LocalEngine(g)
+    lpa = community._lpa_spec(8, 1.0)
+    assert not eng.superstep_supported(lpa, "fused")      # structured
+    assert not eng.superstep_supported(lpa, "frontier")
+    dense_only = dataclasses.replace(
+        traversal._BFS_SPEC, elementwise_message=False, frontier_init=None)
+    assert not eng.superstep_supported(dense_only, "fused")
+    with pytest.raises(ValueError):
+        pregel.run_pregel_fused(dense_only, None, jnp.zeros(4), 1)
+    no_frontier = dataclasses.replace(traversal._BFS_SPEC,
+                                      frontier_mode=None,
+                                      frontier_init=None)
+    with pytest.raises(ValueError):
+        pregel.run_pregel_frontier(no_frontier, None, jnp.zeros(4), 1)
+
+
+def test_mesh_model_sharding_disables_variants():
+    g = _random_graph()
+    eng = DistributedEngine(g, n_data=2, n_model=2)
+    # model-sharded vertex state: single-device ELL layouts don't apply
+    assert not eng.superstep_supported(traversal._BFS_SPEC, "fused")
+    assert not eng.superstep_supported(traversal._BFS_SPEC, "frontier")
+    # ... but a meshless edge-sharded engine supports both, and 'auto'
+    # picks the frontier for a monotone spec
+    flat = DistributedEngine(g, n_data=2)
+    assert flat.superstep_supported(traversal._BFS_SPEC, "frontier")
+    init = jnp.full((flat.sharded.n_pad,), jnp.inf).at[0].set(0.0)
+    out, _ = flat.run_superstep(traversal._BFS_SPEC, init,
+                                g.n_vertices, variant="auto")
+    ref, _ = pregel.run_pregel(traversal._BFS_SPEC, flat.sharded, init,
+                               g.n_vertices)
+    assert _bits(out) == _bits(ref[: g.n_vertices])
+
+
+# ---------------------------------------------------------- mixed precision
+
+def test_reduced_precision_parity_and_tolerance():
+    """bf16 message channel: all three strategies agree bit-for-bit
+    (per-message rounding happens before the exact min fold), and the
+    result stays within the per-hop rounding bound of full precision."""
+    g = _random_graph(seed=5)
+    rp = pregel.reduced_precision(traversal._SSSP_SPEC, jnp.bfloat16)
+    eng = LocalEngine(g)
+    init = jnp.full((eng.sharded.n_pad,), jnp.inf).at[0].set(0.0)
+    V = g.n_vertices
+    full, iters = eng.run_superstep(traversal._SSSP_SPEC, init, V)
+    outs = {v: eng.run_superstep(rp, init, V, variant=v)[0]
+            for v in ("dense", "fused", "frontier")}
+    assert _bits(outs["dense"]) == _bits(outs["fused"])
+    assert _bits(outs["dense"]) == _bits(outs["frontier"])
+    red = np.asarray(outs["dense"], dtype=np.float64)
+    ref = np.asarray(full[:V], dtype=np.float64)
+    assert (np.isfinite(red) == np.isfinite(ref)).all()
+    fin = np.isfinite(ref)
+    # bf16: 8 mantissa bits -> per-message relative rounding 2^-8,
+    # compounded over at most `iters` relaxation hops
+    bound = int(iters) * 2.0 ** -7
+    assert np.all(np.abs(red[fin] - ref[fin])
+                  <= bound * np.maximum(ref[fin], 1e-6) + 1e-6)
+
+
+def test_precision_validation_gates():
+    # min always tolerates a reduced channel
+    pregel.check_precision(
+        pregel.reduced_precision(traversal._BFS_SPEC, jnp.float16))
+    # inexact sums need the explicit opt-in
+    with pytest.raises(ValueError, match="allow_inexact_sum"):
+        pregel.reduced_precision(_kcore_spec(2), jnp.bfloat16)
+    opted = pregel.reduced_precision(_kcore_spec(2), jnp.bfloat16,
+                                     allow_inexact_sum=True)
+    assert opted.message_dtype == "bfloat16"
+    # structured (grouped-monoid) messages can't take a channel dtype
+    with pytest.raises(ValueError, match="structured"):
+        pregel.reduced_precision(community._lpa_spec(8, 1.0),
+                                 jnp.bfloat16)
+    # the dense path validates too
+    bad = dataclasses.replace(_kcore_spec(2), message_dtype="bfloat16")
+    g = _self_loop_graph()
+    with pytest.raises(ValueError, match="allow_inexact_sum"):
+        pregel.run_pregel(bad, partition_1d(g, 1),
+                          jnp.ones(g.n_vertices), 2)
+
+
+# ------------------------------------------------------------- fused batch
+
+def test_batched_spec_rides_superstep_variants():
+    """The [V, K] fused-batch program runs through run_superstep
+    ('auto' resolves frontier here) with every column bit-identical to
+    its solo dense run."""
+    g = _random_graph(seed=9)
+    V = g.n_vertices
+    eng = LocalEngine(g)
+    bs = pregel.batched_spec(traversal._BFS_SPEC)
+    assert bs.elementwise_message and bs.frontier_mode == "monotone"
+    assert eng.superstep_supported(bs, "frontier")
+    source_sets = [(0,), (5,), (9, 17)]
+    init = np.full((eng.sharded.n_pad, len(source_sets)), np.inf,
+                   dtype=np.float32)
+    for b, srcs in enumerate(source_sets):
+        init[np.asarray(srcs, dtype=np.int64), b] = 0.0
+    fused, _ = eng.run_superstep(bs, jnp.asarray(init), V, variant="auto")
+    dense, _ = eng.run_superstep(bs, jnp.asarray(init), V, variant="dense")
+    assert _bits(fused) == _bits(dense)
+    for b, srcs in enumerate(source_sets):
+        solo = eng.run("bfs", {"sources": srcs}, variant="dense")
+        assert _bits(fused[:V, b]) == _bits(solo.value)
+
+
+# ------------------------------------------------------- planner selection
+
+def test_planner_sees_superstep_variants():
+    stats = P.GraphStats(10**6, 5 * 10**6, 6 * 10**7)
+    for algo in ("bfs", "sssp", "connected_components", "k_core"):
+        specs = P.specs_for(algo, stats)
+        assert [s.variant for s in specs] == ["dense", "fused", "frontier"]
+        by_v = {s.variant: s for s in specs}
+        assert (by_v["frontier"].edge_bytes_factor
+                < by_v["fused"].edge_bytes_factor
+                < by_v["dense"].edge_bytes_factor)
+
+
+def test_service_plan_picks_frontier_and_caches_across_variants():
+    from repro.core.query import GraphPlatform, GraphQuery
+    g = _random_graph()
+    plat = GraphPlatform(g, force_engine="local")
+    r = plat.query(GraphQuery.bfs([0]))
+    assert r.meta.get("variant") == "frontier"
+    dense = LocalEngine(g).run("bfs", {"sources": (0,)}, variant="dense")
+    assert _bits(r.value) == _bits(dense.value)
+
+
+def test_calibration_overrides_superstep_factor():
+    prof = P.CalibrationProfile(
+        superstep_edge_bytes={"frontier": 9.0})
+    assert prof.superstep_factor("frontier") == 9.0
+    assert prof.superstep_factor("dense") == 1.0
+    old = P.active_calibration()
+    try:
+        P.set_calibration(prof)
+        stats = P.GraphStats(10**6, 5 * 10**6, 6 * 10**7)
+        specs = {s.variant: s for s in P.specs_for("bfs", stats)}
+        assert specs["frontier"].edge_bytes_factor == 9.0
+    finally:
+        P.set_calibration(old)

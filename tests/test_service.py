@@ -15,7 +15,8 @@ import pytest
 
 from repro.core import graph as G
 from repro.core import planner as P
-from repro.core.algorithms import traversal
+from repro.core.algorithms import traversal  # noqa: F401 (registration)
+from repro.core.engines import Engine
 from repro.core.query import GraphPlatform, GraphQuery
 from repro.core.service import (AdmissionRejected, GraphAnalyticsService,
                                 QueryTicket)
@@ -50,16 +51,18 @@ def _batch_service(graph, **add_kw):
 
 @pytest.fixture()
 def count_pregel_calls(monkeypatch):
-    """Count actual run_pregel invocations made by the traversal
-    runners (solo inits and fused batch runners share this binding)."""
+    """Count fused pregel executions: the traversal batch runner
+    dispatches each fused program through Engine.run_superstep exactly
+    once (whatever superstep strategy — dense, fused kernel, frontier —
+    the engine then resolves)."""
     calls = {"n": 0}
-    real = traversal.run_pregel
+    real = Engine.run_superstep
 
-    def counting(*a, **kw):
+    def counting(self, *a, **kw):
         calls["n"] += 1
-        return real(*a, **kw)
+        return real(self, *a, **kw)
 
-    monkeypatch.setattr(traversal, "run_pregel", counting)
+    monkeypatch.setattr(Engine, "run_superstep", counting)
     return calls
 
 

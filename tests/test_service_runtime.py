@@ -397,3 +397,40 @@ def test_result_awaits_inflight_ticket(graph, flaky_algorithm):
     assert t.status == "done"
     assert svc.context("g").local.n_runs == 1    # executed exactly once
     np.testing.assert_array_equal(np.asarray(r.value), np.arange(8.0))
+
+
+def test_superstep_variant_digest_parity(graph):
+    """Frontier-vs-dense determinism bar, mirroring the stress digest:
+    every superstep strategy must produce byte-identical results for
+    every algorithm that registered variants, and the combined digest is
+    emitted to ``RUNTIME_DIGEST_OUT`` so CI diffs it across
+    ``PYTHONHASHSEED`` values alongside the scheduler digest."""
+    from repro.core.engines import LocalEngine
+    import repro.core.algorithms.traversal            # noqa: F401
+    import repro.core.algorithms.connected_components  # noqa: F401
+    import repro.core.algorithms.triangles             # noqa: F401
+
+    sym = G.build_coo(np.asarray(graph.src)[: graph.n_edges],
+                      np.asarray(graph.dst)[: graph.n_edges],
+                      graph.n_vertices, symmetrize=True)
+    engines = {False: LocalEngine(graph), True: LocalEngine(sym)}
+    chunks = []
+    for name, defn in sorted(R.items()):
+        variants = sorted(defn.variants or ())
+        if "frontier" not in variants:
+            continue
+        eng = engines[defn.requires_symmetric]
+        params = dict(defn.example_params or {})
+        outs = {v: np.asarray(eng.run(defn, params, variant=v).value)
+                for v in variants}
+        ref = outs["dense"]
+        for v, arr in outs.items():
+            assert arr.tobytes() == ref.tobytes(), (name, v)
+        chunks.append(name.encode() + b":" + ref.tobytes())
+    assert chunks                            # the variant family exists
+    digest = hashlib.blake2b(b"|".join(chunks),
+                             digest_size=16).hexdigest()
+    out = os.environ.get("RUNTIME_DIGEST_OUT")
+    if out:                                  # CI nondeterminism probe
+        with open(out, "a") as f:
+            f.write(f"superstep_digest {digest}\n")
