@@ -24,10 +24,12 @@ registry's method table via ``__getattr__``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.core import graph as G
@@ -84,6 +86,14 @@ class Engine:
         # Measured structure observed while building derived state,
         # fed back into GraphStats by the service/platform layer.
         self._measured: dict = {}
+        # Device pool binding (hybrid-cloud federation): ``pool`` is the
+        # DevicePool this engine executes on (None = the process
+        # default), and ``_pool_twins`` caches one pool-bound twin per
+        # pool name — each twin owns its *own* ShardedCOO/ELL/
+        # OrientedELL derived state, so per-pool sharded state is keyed
+        # by pool behind the one ``for_pool`` seam.
+        self.pool = None
+        self._pool_twins: dict = {}
         # One execution at a time per engine instance: the service
         # runtime runs one worker per engine, and a direct caller racing
         # a worker must not observe a half-built ELL or two interleaved
@@ -248,6 +258,52 @@ class Engine:
         return run_pregel(spec, self.sharded, init_state, max_iters,
                           mesh=self.mesh)
 
+    # -- device pools -------------------------------------------------------
+    def for_pool(self, pool) -> "Engine":
+        """The pool-bound twin of this engine (cached per pool name).
+
+        The twin shares the exact COO but owns separate derived state —
+        its ShardedCOO/ELL/OrientedELL builds land on (and stay
+        resident on) the pool's devices, which is precisely the
+        per-pool snapshot residency the federation planner prices.
+        ``None`` (or this engine's own pool) returns ``self``; results
+        are contractually identical wherever they run.
+        """
+        if pool is None:
+            return self
+        if self.pool is not None and self.pool.name == pool.name:
+            return self
+        with self._meta_lock:
+            twin = self._pool_twins.get(pool.name)
+            if twin is None:
+                twin = self._clone()
+                twin.pool = pool
+                self._pool_twins[pool.name] = twin
+            return twin
+
+    def _clone(self) -> "Engine":
+        """A fresh engine over the same COO and configuration, with no
+        derived state — subclasses override to keep their extras."""
+        return Engine(self.coo, mesh=self.mesh, n_data=self.n_data,
+                      n_model=self.n_model, max_degree=self.max_degree)
+
+    def pool_twins(self) -> dict:
+        """Snapshot of the pool-bound twins built so far (the service
+        merges their measured structure alongside this engine's)."""
+        with self._meta_lock:
+            return dict(self._pool_twins)
+
+    def _device_scope(self):
+        """Execution placement for a pool-bound engine: computations
+        default onto the pool's first device.  A meshless engine on the
+        default pool (or a pool with no devices) runs unscoped —
+        exactly the pre-pool behaviour."""
+        devs = getattr(self.pool, "devices", ()) if self.pool is not None \
+            else ()
+        if devs and self.mesh is None:
+            return jax.default_device(devs[0])
+        return contextlib.nullcontext()
+
     def measurements(self) -> dict:
         """Measured graph structure observed so far (only fields whose
         derived state this engine has actually built) — the feedback
@@ -280,7 +336,7 @@ class Engine:
             G.require_symmetric(self.coo, defn.name)
         if variant is None and defn.variants:
             variant = self._select_variant(defn, p, count_only)
-        with self._exec_lock:
+        with self._exec_lock, self._device_scope():
             self.n_runs += 1
             # the fault-injection seam: per attempt, so the service's
             # retry loop re-triggers an installed policy on every try
@@ -320,7 +376,7 @@ class Engine:
         ps = [defn.validate(p) for p in params_list]
         if defn.requires_symmetric:
             G.require_symmetric(self.coo, defn.name)
-        with self._exec_lock:
+        with self._exec_lock, self._device_scope():
             self.n_runs += 1
             R.apply_fault(defn.name)     # one fused execution, one fault
             values, iters, fused_meta = defn.batch_runner(self, ps)
@@ -418,6 +474,10 @@ class LocalEngine(Engine):
         self.use_pallas = use_pallas
         self._spmv = ell_ops.ell_spmv if use_pallas else ell_ops.ell_spmv_ref
 
+    def _clone(self) -> "LocalEngine":
+        return LocalEngine(self.coo, max_degree=self.max_degree,
+                           use_pallas=self.use_pallas)
+
 
 class DistributedEngine(Engine):
     """Edge-partitioned BSP engine over a device mesh (Spark analogue)."""
@@ -436,3 +496,8 @@ class DistributedEngine(Engine):
             nm = n_model
         super().__init__(coo, mesh=mesh, n_data=nd, n_model=nm,
                          max_degree=max_degree)
+
+    def _clone(self) -> "DistributedEngine":
+        return DistributedEngine(self.coo, mesh=self.mesh,
+                                 n_data=self.n_data, n_model=self.n_model,
+                                 max_degree=self.max_degree)

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Mapping, Optional, Sequence
 
 from repro.core import registry
@@ -163,7 +164,34 @@ class CalibrationProfile:
         return cls(**d)
 
 
-_ACTIVE_PROFILE = CalibrationProfile()
+#: The checked-in calibration residue: a reference profile emitted by
+#: ``benchmarks/algo_suite.py --emit-calibration`` on a real box.  It is
+#: auto-loaded at import so production callers start from measured
+#: constants; tests pin the analytic defaults (``set_calibration(None)``
+#: in ``tests/conftest.py``) because the fitted values are
+#: box-specific.
+_REFERENCE_PROFILE = os.path.join(os.path.dirname(__file__),
+                                  "calibration", "reference_profile.json")
+
+
+def reference_profile_path() -> str:
+    return _REFERENCE_PROFILE
+
+
+def _load_reference() -> Optional["CalibrationProfile"]:
+    try:
+        return CalibrationProfile.from_json(_REFERENCE_PROFILE)
+    except (OSError, ValueError, TypeError):
+        return None
+
+
+_REFERENCE = _load_reference()
+#: True when the checked-in reference profile parsed and became the
+#: import-time default (the calibration-residue contract).
+AUTO_LOADED_REFERENCE = _REFERENCE is not None
+
+_ACTIVE_PROFILE = _REFERENCE if _REFERENCE is not None \
+    else CalibrationProfile()
 _PROFILE_GENERATION = 0    # bumped on every swap; plan caches key on it
 
 
@@ -190,6 +218,13 @@ def set_calibration(profile: Optional[CalibrationProfile]) \
 def load_calibration(path) -> CalibrationProfile:
     """Load a ``--emit-calibration`` profile and make it active."""
     return set_calibration(CalibrationProfile.from_json(path))
+
+
+def load_reference_calibration() -> CalibrationProfile:
+    """(Re-)install the checked-in reference profile — the explicit form
+    of the import-time auto-load (tests that pinned the analytic
+    defaults use this to opt back in)."""
+    return load_calibration(_REFERENCE_PROFILE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,6 +283,15 @@ class Plan:
     est_dist_s: float
     reason: str
     variant: Optional[str] = None  # chosen execution variant, if any
+    # -- federation axis ----------------------------------------------------
+    # pool: the DevicePool the plan places onto (None on the legacy
+    # poolset-free path).  est_s: the chosen pool's *total* estimate —
+    # compute (scaled by the pool's compute_scale) plus transfer_s, the
+    # data-locality term (0 when the snapshot is resident on the pool,
+    # else bytes_coo / pool.link_bandwidth).
+    pool: Optional[str] = None
+    est_s: Optional[float] = None
+    transfer_s: float = 0.0
 
 
 def estimate_local_cost(g: GraphStats, q: QuerySpec,
@@ -289,7 +333,11 @@ def estimate_dist_cost(g: GraphStats, q: QuerySpec, n_chips: int,
 
 def plan_cost(plan: Plan) -> float:
     """The estimate for the plan's *chosen* engine — what the service's
-    admission/tier classification keys on."""
+    admission/tier classification keys on.  Pool-aware plans carry the
+    total (compute-scaled + transfer) in ``est_s``; legacy plans fall
+    back to the raw per-engine estimate."""
+    if plan.est_s is not None:
+        return plan.est_s
     return plan.est_local_s if plan.engine == "local" else plan.est_dist_s
 
 
@@ -310,33 +358,93 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
                 variant=q.variant)
 
 
-def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
-                n_chips: int) -> Plan:
-    """Pick the cheapest feasible (engine, variant) pair.
+def transfer_seconds(g: GraphStats, pool) -> float:
+    """Time to materialize a non-resident snapshot onto ``pool`` — the
+    data-locality term the federation planner adds for remote pools."""
+    bw = float(getattr(pool, "link_bandwidth", 0.0) or 0.0)
+    if bw <= 0:
+        return float("inf")
+    return g.bytes_coo / bw
 
-    With one spec this is exactly :func:`choose_engine` (same Plan, same
-    reason strings).  With several — one per registered execution
-    variant — every (spec, engine) combination is costed and the global
-    minimum wins; a variant whose state fits one device can keep a query
-    local that another variant's memory footprint would force
-    distributed (triangle counting's ELL-intersect vs bitset paths).
-    Ties prefer earlier specs, so the registration order is the
-    tie-break for interactive-scale graphs.
+
+def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
+                n_chips: int, pools=None, resident=None,
+                engines: Sequence[str] = ("local", "distributed")) -> Plan:
+    """Pick the cheapest feasible placement.
+
+    Without ``pools`` (the legacy path) this minimizes over
+    (engine, variant): with one spec it is exactly :func:`choose_engine`
+    (same Plan, same reason strings); with several — one per registered
+    execution variant — every (spec, engine) combination is costed and
+    the global minimum wins; a variant whose state fits one device can
+    keep a query local that another variant's memory footprint would
+    force distributed (triangle counting's ELL-intersect vs bitset
+    paths).  Ties prefer earlier specs, so the registration order is
+    the tie-break for interactive-scale graphs.
+
+    With ``pools`` (a sequence of :class:`~repro.core.pools.DevicePool`
+    or anything shaped like one) the minimum runs over
+    **(pool, engine, variant)**: each healthy pool's cost is
+    ``compute_scale * engine_estimate(pool chips) + transfer``, where
+    the transfer term is zero when the pool's name is in ``resident``
+    and ``bytes_coo / link_bandwidth`` otherwise — a resident replica
+    is the locality discount the paper's snapshot placement buys.
+    ``engines`` restricts the engine axis (the ``force_engine`` /
+    capability-clamp re-plan path).  Ties prefer earlier pools, then
+    earlier specs, then the local engine — so a trivial one-pool set
+    reproduces the legacy choice exactly.
     """
     specs = list(specs)
-    if len(specs) == 1:
-        return choose_engine(g, specs[0], n_chips)
-    best, best_cost = None, float("inf")
-    for q in specs:
-        plan = choose_engine(g, q, n_chips)
-        # the distributed estimate is always finite, so every spec has a
-        # finite comparison cost and the first one seeds ``best``
-        cost = plan.est_local_s if plan.engine == "local" else plan.est_dist_s
-        if best is None or cost < best_cost:
-            best, best_cost = plan, cost
+    if pools is None:
+        if len(specs) == 1:
+            return choose_engine(g, specs[0], n_chips)
+        best, best_cost = None, float("inf")
+        for q in specs:
+            plan = choose_engine(g, q, n_chips)
+            # the distributed estimate is always finite, so every spec
+            # has a finite comparison cost and the first seeds ``best``
+            cost = plan.est_local_s if plan.engine == "local" \
+                else plan.est_dist_s
+            if best is None or cost < best_cost:
+                best, best_cost = plan, cost
+        if best.variant is not None:
+            best = dataclasses.replace(
+                best, reason=f"variant {best.variant}: {best.reason}")
+        return best
+
+    resident = frozenset(resident or ())
+    healthy = [p for p in pools if getattr(p, "healthy", True)]
+    if not healthy:
+        raise ValueError(
+            f"no healthy pool to place onto (pools: "
+            f"{[getattr(p, 'name', '?') for p in pools]})")
+    best = best_pool = None
+    best_cost = float("inf")
+    for pool in healthy:
+        pn = getattr(pool, "n_chips", None) or n_chips
+        scale = float(getattr(pool, "compute_scale", 1.0))
+        transfer = 0.0 if pool.name in resident else transfer_seconds(g, pool)
+        for q in specs:
+            tl = estimate_local_cost(g, q)
+            td = estimate_dist_cost(g, q, pn)
+            for engine, base in (("local", tl), ("distributed", td)):
+                if engine not in engines:
+                    continue
+                total = scale * base + transfer
+                if best is None or total < best_cost:
+                    best = Plan(engine, tl, td, "", variant=q.variant,
+                                pool=pool.name, est_s=total,
+                                transfer_s=transfer)
+                    best_pool, best_cost = pool, total
+    if best is None:
+        raise ValueError(f"no engine among {tuple(engines)} to place onto")
+    locality = "resident" if best.transfer_s == 0.0 else \
+        f"+{best.transfer_s * 1e3:.2f} ms transfer"
+    why = (f"{best.engine} on pool {best_pool.name} ({locality}): "
+           f"{best_cost * 1e3:.2f} ms est")
     if best.variant is not None:
-        best = dataclasses.replace(
-            best, reason=f"variant {best.variant}: {best.reason}")
+        why = f"variant {best.variant}: {why}"
+    best.reason = why
     return best
 
 

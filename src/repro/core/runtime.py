@@ -23,14 +23,22 @@ pieces:
   log-spaced bucket counts for the ``metrics()`` snapshot plus a
   bounded raw-sample window for exact small-N percentiles (the
   benchmark's p50/p99 and the "interactive beats batch" assertion).
+* :class:`PoolGate` — the per-pool in-flight cap of the federation
+  runtime: workers claiming a unit bound for pool P must acquire P's
+  slot first, so a pool with ``max_inflight=1`` never runs two units
+  at once even when several contexts could.
+* :class:`TransferLedger` — per-pool transfer accounting: every
+  non-resident execution records the snapshot bytes it had to move,
+  the number behind ``metrics()['pools'][*]['transfer_bytes']``.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 import random
+import threading
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Mapping, Optional
 
 
 class Backpressure(Exception):
@@ -164,3 +172,77 @@ class LatencyHistogram:
             "p99_s": self.percentile(99),
             "buckets": cum,
         }
+
+
+# ---------------------------------------------------------------------------
+# Federation runtime primitives
+# ---------------------------------------------------------------------------
+
+class PoolGate:
+    """Per-pool in-flight caps for the worker pool.
+
+    ``caps`` maps pool name to its ``max_inflight`` (``None`` or a
+    missing name = unbounded — unknown pools, and the poolset-free
+    legacy path, always pass).  ``try_acquire`` is non-blocking: a
+    worker that cannot enter a pool parks the queue and scans on, the
+    same protocol as a busy (context, engine) pair.
+    """
+
+    def __init__(self, caps: Optional[Mapping[str, Optional[int]]] = None):
+        self._caps = dict(caps or {})
+        self._inflight: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def try_acquire(self, pool: Optional[str]) -> bool:
+        if pool is None:
+            return True
+        with self._lock:
+            cap = self._caps.get(pool)
+            n = self._inflight.get(pool, 0)
+            if cap is not None and n >= cap:
+                return False
+            self._inflight[pool] = n + 1
+            return True
+
+    def release(self, pool: Optional[str]) -> None:
+        if pool is None:
+            return
+        with self._lock:
+            n = self._inflight.get(pool, 0)
+            if n <= 0:
+                raise RuntimeError(f"release of idle pool {pool!r}")
+            self._inflight[pool] = n - 1
+
+    def inflight(self, pool: str) -> int:
+        with self._lock:
+            return self._inflight.get(pool, 0)
+
+
+class TransferLedger:
+    """Thread-safe per-pool transfer accounting: how many snapshot
+    bytes each pool pulled across the link to serve non-resident work
+    (and how many distinct transfers)."""
+
+    def __init__(self):
+        self._bytes: dict[str, int] = {}
+        self._count: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def record(self, pool: str, n_bytes: int) -> None:
+        with self._lock:
+            self._bytes[pool] = self._bytes.get(pool, 0) + int(n_bytes)
+            self._count[pool] = self._count.get(pool, 0) + 1
+
+    def bytes_for(self, pool: str) -> int:
+        with self._lock:
+            return self._bytes.get(pool, 0)
+
+    def transfers_for(self, pool: str) -> int:
+        with self._lock:
+            return self._count.get(pool, 0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {p: {"transfer_bytes": self._bytes.get(p, 0),
+                        "transfers": self._count.get(p, 0)}
+                    for p in sorted(set(self._bytes) | set(self._count))}

@@ -46,6 +46,19 @@ module is that service tier:
   histograms, cache hit rates, fusion widths and retry/dead-letter
   counters under one lock — the in-process analogue of the exemplar
   queue-worker stacks' Prometheus gauges.
+* **Federation** — a service built over a non-trivial
+  :class:`~repro.core.pools.PoolSet` plans every query over
+  (pool, engine, variant): ``add_graph(..., pools=[...])`` declares
+  where each snapshot is *resident*, the planner prices non-resident
+  placements with the pool's link bandwidth, queues become
+  per-(pool, engine, tier), a :class:`~repro.core.runtime.PoolGate`
+  caps per-pool in-flight work, and batch tickets **spill** to another
+  resident pool when the preferred pool's batch queue is at its
+  capacity.  Executing on a previously non-resident pool records the
+  snapshot bytes in a :class:`~repro.core.runtime.TransferLedger` and
+  marks the pool resident (bumping the context's residency generation,
+  which plan and result cache keys include).  Results stay
+  bit-identical regardless of the pool that runs them.
 
 ``GraphPlatform`` (``repro.core.query``) survives as a thin per-graph
 facade over these primitives: its synchronous ``query`` is
@@ -57,10 +70,11 @@ import dataclasses
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Optional
+from typing import Any, Iterable, Optional, Sequence
 
 from repro.core import graph as G
 from repro.core import planner as P
+from repro.core import pools as PL
 from repro.core import registry as R
 from repro.core import runtime as RT
 from repro.core.engines import DistributedEngine, LocalEngine, QueryResult
@@ -119,6 +133,7 @@ class QueryTicket:
                                                        repr=False)
     attempts: int = 0
     queued_at: float = dataclasses.field(default=0.0, repr=False)
+    pool: Optional[str] = None    # placement pool (None = legacy/trivial)
 
 
 class GraphContext:
@@ -132,10 +147,26 @@ class GraphContext:
     def __init__(self, coo: G.GraphCOO, mesh=None, n_data: int = 1,
                  n_model: int = 1, local_max_degree: int = 128,
                  force_engine: Optional[str] = None,
-                 plan_cache_size: int = 128):
+                 plan_cache_size: int = 128,
+                 pools: Optional[PL.PoolSet] = None,
+                 residency: Optional[Iterable[str]] = None):
         self.coo = coo
         self.mesh = mesh
         self.force_engine = force_engine
+        # -- federation: the service's poolset and this snapshot's
+        # residency.  ``_declared`` pools come from add_graph; the
+        # ``_materialized`` set grows when an execution builds derived
+        # state on a pool the snapshot was not declared on.  Effective
+        # residency is their union; every change bumps the residency
+        # generation, which the plan cache (below) and the service's
+        # result-cache keys incorporate.
+        self._pools = pools
+        self._declared: set = set(residency or ())
+        self._materialized: set = set()
+        self._residency_generation = 0
+        self._seen_residency_gen = 0
+        self._pools_generation = (pools.generation
+                                  if pools is not None else 0)
         self._base_stats = P.GraphStats.of(coo)
         self.stats = self._base_stats
         self._local: Optional[LocalEngine] = None
@@ -180,8 +211,60 @@ class GraphContext:
                                                n_model=self._n_model)
             return self._dist
 
-    def engine(self, name: str):
-        return self.local if name == "local" else self.distributed
+    def engine(self, name: str, pool=None):
+        """The engine for ``name`` — the process-default instance, or
+        its pool-bound twin when a :class:`~repro.core.pools.DevicePool`
+        is given (the ``Engine.for_pool`` seam)."""
+        base = self.local if name == "local" else self.distributed
+        if pool is None:
+            return base
+        return base.for_pool(pool)
+
+    def pool_for_plan(self, plan: P.Plan):
+        """Resolve a plan's pool name to the DevicePool to execute on;
+        ``None`` for legacy plans and trivial (single default) poolsets,
+        which keeps the pre-federation execution path byte-for-byte."""
+        if self._pools is None or plan.pool is None or self._pools.trivial:
+            return None
+        return self._pools.get(plan.pool)
+
+    # -- residency ----------------------------------------------------------
+    def _residency_change(self, declared=None, materialize=None) -> bool:
+        before = self._declared | self._materialized
+        if declared is not None:
+            self._declared = set(declared)
+        if materialize is not None:
+            self._materialized.add(materialize)
+        changed = (self._declared | self._materialized) != before
+        if changed:
+            self._residency_generation += 1
+        return changed
+
+    @property
+    def residency(self) -> frozenset:
+        """Pool names where this snapshot is resident (declared at
+        add_graph plus pools materialized by execution)."""
+        with self._lock:
+            return frozenset(self._declared | self._materialized)
+
+    @property
+    def residency_generation(self) -> int:
+        with self._lock:
+            return self._residency_generation
+
+    def declare_residency(self, names: Iterable[str]) -> bool:
+        """Replace the declared residency set (the service recomputes it
+        as the union over catalog names sharing this context).  Returns
+        whether the effective residency changed (generation bumped)."""
+        with self._lock:
+            return self._residency_change(declared=names)
+
+    def mark_resident(self, pool_name: str) -> bool:
+        """Record that an execution materialized derived state on
+        ``pool_name``.  True iff the pool was newly resident — the
+        moment the service charges the transfer ledger."""
+        with self._lock:
+            return self._residency_change(materialize=pool_name)
 
     def current_stats(self) -> P.GraphStats:
         """Stats with every measurement the engines have fed back so far
@@ -194,6 +277,8 @@ class GraphContext:
             for eng in (self._local, self._dist):
                 if eng is not None:
                     meas.update(eng.measurements())
+                    for twin in eng.pool_twins().values():
+                        meas.update(twin.measurements())
             if meas != self._applied_measurements:
                 self._applied_measurements = meas
                 self.stats = self._base_stats.with_measurements(meas)
@@ -201,6 +286,17 @@ class GraphContext:
             gen = P.calibration_generation()
             if gen != self._profile_generation:
                 self._profile_generation = gen
+                self._plan_cache.clear()
+            # federation invalidation: a pool-health flip (poolset
+            # generation) or a residency change (replica removed, pool
+            # materialized) re-costs every cached plan
+            if self._pools is not None:
+                pg = self._pools.generation
+                if pg != self._pools_generation:
+                    self._pools_generation = pg
+                    self._plan_cache.clear()
+            if self._residency_generation != self._seen_residency_gen:
+                self._seen_residency_gen = self._residency_generation
                 self._plan_cache.clear()
             return self.stats
 
@@ -213,43 +309,87 @@ class GraphContext:
         except TypeError:       # unhashable parameter value: skip caching
             return None
 
+    def _placement_pools(self):
+        """Pools the planner minimizes over, or ``None`` for the legacy
+        (engine, variant)-only path.  A trivial poolset (one pool, unit
+        scale) stays on the legacy path so its plans — estimates, reason
+        strings, ``pool=None`` — match the pre-federation planner
+        exactly."""
+        if self._pools is None or self._pools.trivial:
+            return None
+        return self._pools.pools()
+
     def plan(self, q) -> P.Plan:
-        """Cost every (engine, variant) pair and pick one (cached per
-        query shape)."""
+        """Cost every (pool, engine, variant) placement and pick one
+        (cached per query shape; the cache is cleared on measurement,
+        calibration, pool-health and residency changes)."""
         with self._lock:
             stats = self.current_stats()
             key = self._query_key(q)
             if key is not None and key in self._plan_cache:
                 self._plan_cache.move_to_end(key)
                 return self._plan_cache[key]
-            defn = R.get(q.algorithm)
-            specs = P.specs_for(q.algorithm, stats,
-                                count_only=q.count_only, **q.params)
-            plan = P.choose_plan(stats, specs, self.n_chips)
-            chosen_engine = plan.engine
-            if self.force_engine:
-                plan = dataclasses.replace(
-                    plan, engine=self.force_engine,
-                    reason=f"forced: {self.force_engine}")
-            if plan.engine not in defn.engines:
-                # capability clamp wins over the cost model and forcing
-                plan = dataclasses.replace(
-                    plan, engine=defn.engines[0],
-                    reason=f"{q.algorithm} runs on "
-                           f"{'/'.join(defn.engines)} only")
-            if len(specs) > 1 and plan.engine != chosen_engine:
-                # engine was overridden: re-pick its cheapest variant
-                best = P.best_spec_for_engine(stats, specs, plan.engine,
-                                              self.n_chips)
-                plan = dataclasses.replace(plan, variant=best.variant)
+            pools = self._placement_pools()
+            plan = self._plan_uncached(
+                q, stats, pools,
+                self.residency if pools is not None else None)
             if key is not None and self._plan_cache_size:
                 self._plan_cache[key] = plan
                 while len(self._plan_cache) > self._plan_cache_size:
                     self._plan_cache.popitem(last=False)
             return plan
 
+    def plan_for_pools(self, q, pool_names: Sequence[str]) -> P.Plan:
+        """Re-place ``q`` restricted to ``pool_names`` — the service's
+        batch-spill path.  Never cached: the restriction reflects live
+        queue depths, not the query's shape."""
+        with self._lock:
+            stats = self.current_stats()
+            pools = [self._pools.get(n) for n in pool_names]
+            return self._plan_uncached(q, stats, pools, self.residency)
+
+    def _plan_uncached(self, q, stats, pools, resident) -> P.Plan:
+        """One planning pipeline for both the legacy and the pool-aware
+        paths: cost-model choice, then force_engine, then the
+        capability clamp (which wins over both), then variant re-pick
+        for the overridden engine."""
+        defn = R.get(q.algorithm)
+        specs = P.specs_for(q.algorithm, stats,
+                            count_only=q.count_only, **q.params)
+        if pools is None:
+            plan = P.choose_plan(stats, specs, self.n_chips)
+        else:
+            plan = P.choose_plan(stats, specs, self.n_chips,
+                                 pools=pools, resident=resident)
+        chosen_engine = plan.engine
+        target = why = None
+        if self.force_engine:
+            target, why = self.force_engine, f"forced: {self.force_engine}"
+        if (target or plan.engine) not in defn.engines:
+            # capability clamp wins over the cost model and forcing
+            target = defn.engines[0]
+            why = f"{q.algorithm} runs on {'/'.join(defn.engines)} only"
+        if target is None:
+            return plan
+        if pools is not None:
+            # re-run the placement with the engine axis pinned, so the
+            # override still picks the best (pool, variant) for it
+            if target != chosen_engine:
+                plan = P.choose_plan(stats, specs, self.n_chips,
+                                     pools=pools, resident=resident,
+                                     engines=(target,))
+            return dataclasses.replace(plan,
+                                       reason=f"{why}; {plan.reason}")
+        plan = dataclasses.replace(plan, engine=target, reason=why)
+        if len(specs) > 1 and target != chosen_engine:
+            # engine was overridden: re-pick its cheapest variant
+            best = P.best_spec_for_engine(stats, specs, target,
+                                          self.n_chips)
+            plan = dataclasses.replace(plan, variant=best.variant)
+        return plan
+
     def execute(self, q, plan: P.Plan) -> QueryResult:
-        r = self.engine(plan.engine).run(
+        r = self.engine(plan.engine, self.pool_for_plan(plan)).run(
             q.algorithm, q.params, count_only=q.count_only,
             variant=plan.variant)
         r.meta["plan"] = plan
@@ -267,10 +407,11 @@ class _WorkUnit:
     kind: str                     # 'solo' | 'group'
     engine: str
     tickets: list
+    pool: Optional[str] = None    # placement pool (gate slot to release)
 
     @property
     def busy_key(self) -> tuple:
-        return (id(self.tickets[0].context), self.engine)
+        return (id(self.tickets[0].context), self.pool, self.engine)
 
 
 class GraphAnalyticsService:
@@ -288,7 +429,11 @@ class GraphAnalyticsService:
     reference schedule); ``retry`` the backoff/dead-letter policy;
     ``tier_depth`` the per-tier queue depth budget (int for both tiers,
     or ``{"interactive": ..., "batch": ...}``; ``None`` = unbounded);
-    ``seed`` makes every backoff schedule deterministic per ticket.
+    ``seed`` makes every backoff schedule deterministic per ticket;
+    ``pools`` the federation topology — a
+    :class:`~repro.core.pools.PoolSet` (or a DevicePool sequence),
+    defaulting to a trivial single pool that reproduces the
+    pre-federation service exactly.
     """
 
     ENGINE_ORDER = ("local", "distributed")
@@ -302,7 +447,19 @@ class GraphAnalyticsService:
                  workers: int = 1,
                  retry: Optional[RT.RetryPolicy] = None,
                  tier_depth=None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 pools=None):
+        if pools is None:
+            self.pools = PL.single_pool()
+        elif isinstance(pools, PL.PoolSet):
+            self.pools = pools
+        else:
+            self.pools = PL.PoolSet(pools)
+        self._pool_gate = RT.PoolGate(
+            {p.name: p.max_inflight for p in self.pools})
+        self._ledger = RT.TransferLedger()
+        self._pool_spills = {p.name: 0 for p in self.pools}
+        self._name_pools: dict[str, tuple] = {}   # name -> declared pools
         self._catalog: dict[str, GraphContext] = {}
         self._by_digest: dict[tuple, GraphContext] = {}
         self.cache_size = cache_size
@@ -323,12 +480,14 @@ class GraphAnalyticsService:
         self._results: dict[int, QueryResult] = {}
         self._resolved_order: deque = deque()
         self._next_ticket = 0
-        self._queues: dict[tuple, deque] = {}   # (engine, tier) -> tickets
+        # (pool, engine, tier) -> tickets; pool is None for plans from
+        # the legacy/trivial-poolset path
+        self._queues: dict[tuple, deque] = {}
         self.execution_log: deque = deque(maxlen=history_size)
         self.stats = {"submitted": 0, "rejected": 0, "backpressure": 0,
                       "executed": 0, "failed": 0, "retries": 0,
                       "dead_letters": 0, "fused_batches": 0,
-                      "fused_tickets": 0}
+                      "fused_tickets": 0, "spilled": 0}
         # -- runtime ---------------------------------------------------
         self.workers = max(int(workers), 1)
         self.retry = RT.RetryPolicy() if retry is None else retry
@@ -344,7 +503,7 @@ class GraphAnalyticsService:
         # result() waiters when a ticket resolves
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
-        self._busy: set = set()        # busy (context, engine) pairs
+        self._busy: set = set()        # busy (context, pool, engine)
         self._inflight = 0             # units currently executing
         self._hist = {t: RT.LatencyHistogram() for t in self.TIER_ORDER}
         self._fusion_widths: deque = deque(maxlen=4096)
@@ -367,18 +526,26 @@ class GraphAnalyticsService:
                   n_data: int = 1, n_model: int = 1,
                   local_max_degree: int = 128,
                   force_engine: Optional[str] = None,
-                  plan_cache_size: Optional[int] = None) -> GraphContext:
+                  plan_cache_size: Optional[int] = None,
+                  pools: Optional[Sequence[str]] = None) -> GraphContext:
         """Register a snapshot under ``name``.  Byte-identical snapshots
         with the same engine configuration share one ``GraphContext`` —
         the catalog-level dedup that makes reloading a snapshot free.
+        ``pools`` names the pools the snapshot is *resident* on
+        (default: all of them — the pre-federation behaviour); replicas
+        of the same bytes under different names merge into one context
+        whose residency is the union of their declarations.
         ``plan_cache_size`` defaults to the service's ``cache_size``, so
         ``cache_size=0`` disables plan caching alongside result caching."""
+        declared = (self.pools.names() if pools is None
+                    else self.pools.validate_names(pools))
         ctx = GraphContext(coo, mesh=mesh, n_data=n_data, n_model=n_model,
                            local_max_degree=local_max_degree,
                            force_engine=force_engine,
                            plan_cache_size=(self.cache_size
                                             if plan_cache_size is None
-                                            else plan_cache_size))
+                                            else plan_cache_size),
+                           pools=self.pools, residency=declared)
         with self._lock:
             dedup_key = (coo.content_digest(),) + ctx.config_key()
             existing = self._by_digest.get(dedup_key)
@@ -387,6 +554,8 @@ class GraphAnalyticsService:
             else:
                 self._by_digest[dedup_key] = ctx
             self._catalog[name] = ctx
+            self._name_pools[name] = tuple(declared)
+            self._refresh_residency(ctx)
             return ctx
 
     def remove_graph(self, name: str) -> None:
@@ -394,12 +563,35 @@ class GraphAnalyticsService:
         rolling-snapshot traffic.  Pending tickets pinned their context
         at submit, so they still execute against the snapshot they were
         admitted for; the context's device state is freed once the
-        catalog, the dedup map and every live ticket release it."""
+        catalog, the dedup map and every live ticket release it.
+        Removing one replica of a multi-pool snapshot shrinks the
+        shared context's declared residency — a residency-generation
+        bump that invalidates cached plans placed on the gone pool."""
         with self._lock:
             ctx = self._catalog.pop(name, None)
-            if ctx is not None and ctx not in self._catalog.values():
+            self._name_pools.pop(name, None)
+            if ctx is None:
+                return
+            if ctx not in self._catalog.values():
                 self._by_digest = {k: v for k, v in self._by_digest.items()
                                    if v is not ctx}
+            else:
+                self._refresh_residency(ctx)
+
+    def _refresh_residency(self, ctx: GraphContext) -> None:
+        """Re-derive ``ctx``'s declared residency as the union over the
+        catalog names that share it (caller holds the lock)."""
+        union: set = set()
+        for name, c in self._catalog.items():
+            if c is ctx:
+                union |= set(self._name_pools.get(name, ()))
+        ctx.declare_residency(union)
+
+    def set_pool_health(self, name: str, healthy: bool) -> PL.DevicePool:
+        """Flip one pool's health.  A real change bumps the poolset
+        generation, so every context's cached plans (and the result-
+        cache keys) that priced the old topology are invalidated."""
+        return self.pools.set_health(name, healthy)
 
     def graph_names(self) -> list[str]:
         with self._lock:
@@ -423,8 +615,13 @@ class GraphAnalyticsService:
         # a dead graph's results, and byte-identical reloads must share.
         # Engine and variant are deliberately absent — results are
         # contractually identical across both, so either one's answer
-        # serves the query (the PR-3 variant argument, finished).
-        return (ctx.coo.content_digest(),) + qkey
+        # serves the query (the PR-3 variant argument, finished).  The
+        # residency and poolset generations ARE present: a replica
+        # removal or health flip must not replay entries admitted under
+        # the old topology (they start at 0 everywhere, so fresh
+        # services sharing a cache still hit each other's entries).
+        return (ctx.coo.content_digest(), ctx.residency_generation,
+                self.pools.generation) + qkey
 
     def _cache_get(self, key) -> Optional[QueryResult]:
         with self._lock:
@@ -455,11 +652,25 @@ class GraphAnalyticsService:
         hit = self._cache_get(key)
         if hit is not None:
             return hit
+        self._account_transfer(ctx, plan)
         r = ctx.execute(q, plan)
         with self._lock:
             self.stats["executed"] += 1
-        self._cache_put(key, r)
+        # re-key: accounting may have just materialized the pool
+        # (residency-generation bump), and the entry must be findable
+        # under the keys later lookups will compute
+        self._cache_put(self._result_key(ctx, q), r)
         return r
+
+    def _account_transfer(self, ctx: GraphContext, plan: P.Plan) -> None:
+        """Executing on a pool materializes the snapshot's derived state
+        there: the first time charges the snapshot bytes to the transfer
+        ledger and marks the pool resident (declared-resident pools were
+        never charged — the replica was already in place)."""
+        if plan.pool is None:
+            return
+        if ctx.mark_resident(plan.pool):
+            self._ledger.record(plan.pool, ctx.stats.bytes_coo)
 
     # -- submission ---------------------------------------------------------
     def submit(self, graph_name: str, q) -> QueryTicket:
@@ -469,8 +680,11 @@ class GraphAnalyticsService:
         estimate exceeds the admission budget, and
         :class:`~repro.core.runtime.Backpressure` when the destination
         queue is at its tier's depth budget.  Admitted tickets queue
-        FIFO per (engine, tier); nothing executes until ``drain`` or
-        ``result``.
+        FIFO per (pool, engine, tier); nothing executes until ``drain``
+        or ``result``.  Batch tickets whose preferred pool's batch
+        queue is at the pool's ``capacity`` *spill*: they re-place onto
+        another healthy pool where the snapshot is resident (tier and
+        admission estimate unchanged).
         """
         ctx = self.context(graph_name)
         plan = ctx.plan(q)
@@ -485,6 +699,8 @@ class GraphAnalyticsService:
                                         self.admission_budget_s)
             tier = ("interactive" if est <= self.interactive_threshold_s
                     else "batch")
+            if tier == "batch":
+                plan = self._maybe_spill(ctx, q, plan)
             budget = self._tier_depth.get(tier)
             if budget is not None:
                 depth = self._queue_depth(plan.engine, tier)
@@ -497,23 +713,70 @@ class GraphAnalyticsService:
                 self._next_ticket, graph_name, q, plan, tier, est,
                 context=ctx,
                 fuse_key=self._fuse_key(defn, q) if defn.fusable else None,
-                queued_at=time.perf_counter())
+                queued_at=time.perf_counter(),
+                pool=plan.pool)
             self._next_ticket += 1
             self._tickets[ticket.ticket_id] = ticket
-            self._queues.setdefault((plan.engine, tier),
+            self._queues.setdefault((plan.pool, plan.engine, tier),
                                     deque()).append(ticket)
             self.stats["submitted"] += 1
             self._cond.notify_all()       # wake a parked worker
             return ticket
 
-    def _queue_depth(self, engine: str, tier: str) -> int:
+    def _maybe_spill(self, ctx: GraphContext, q, plan: P.Plan) -> P.Plan:
+        """Batch-tier spill (caller holds the lock): when the planned
+        pool's batch queue is at the pool's ``capacity``, re-place onto
+        the cheapest other healthy pool where the snapshot is resident
+        and whose own batch queue has room.  No candidate (or no
+        capacity configured) keeps the original plan — spill sheds
+        load, it never strands a query."""
+        if plan.pool is None or len(self.pools) < 2:
+            return plan
+        pool = self.pools.get(plan.pool)
+        if pool.capacity is None:
+            return plan
+        depth = self._pool_batch_depth(plan.pool)
+        if depth < pool.capacity:
+            return plan
+        resident = ctx.residency
+        cands = [p.name for p in self.pools
+                 if p.healthy and p.name != plan.pool
+                 and p.name in resident
+                 and (p.capacity is None
+                      or self._pool_batch_depth(p.name) < p.capacity)]
+        if not cands:
+            return plan
+        try:
+            spilled = ctx.plan_for_pools(q, cands)
+        except ValueError:
+            return plan
+        self.stats["spilled"] += 1
+        self._pool_spills[plan.pool] += 1
+        return dataclasses.replace(
+            spilled,
+            reason=f"spilled from {plan.pool} (batch depth {depth} >= "
+                   f"capacity {pool.capacity}); {spilled.reason}")
+
+    def _queue_depth_key(self, key: tuple) -> int:
         """Live (still-queued) depth of one queue — resolved-out-of-band
         tickets linger in the deque until a dequeue skips them, so
         ``len`` alone over-counts."""
-        q = self._queues.get((engine, tier))
+        q = self._queues.get(key)
         if not q:
             return 0
         return sum(1 for t in q if t.status == "queued")
+
+    def _queue_depth(self, engine: str, tier: str) -> int:
+        """Depth of one (engine, tier) aggregated over pools — the view
+        tier backpressure budgets and ``metrics()['queue_depths']``
+        keep from before federation."""
+        return sum(self._queue_depth_key(k) for k in self._queues
+                   if k[1] == engine and k[2] == tier)
+
+    def _pool_batch_depth(self, pool_name: str) -> int:
+        """Queued batch tickets bound for one pool (the spill trigger)."""
+        return sum(self._queue_depth_key((pool_name, e, "batch"))
+                   for e in self.ENGINE_ORDER)
 
     # -- resolution ---------------------------------------------------------
     def drain(self, workers: Optional[int] = None) -> list[QueryTicket]:
@@ -538,7 +801,10 @@ class GraphAnalyticsService:
                     unit = self._next_unit()
                 if unit is None:
                     break
-                self._execute_unit(unit, finished)
+                try:
+                    self._execute_unit(unit, finished)
+                finally:
+                    self._pool_gate.release(unit.pool)
             return finished
         threads = [
             threading.Thread(target=self._worker_loop, args=(finished,),
@@ -580,8 +846,12 @@ class GraphAnalyticsService:
                 else:
                     drain_needed = True
             if claimed:
-                self._execute_unit(_WorkUnit("solo", t.plan.engine, [t]),
-                                   [])
+                # inline interactive execution deliberately bypasses the
+                # pool gate: the caller is already blocked on this one
+                # result, and the engine lock still serializes the pool's
+                # actual device work
+                self._execute_unit(_WorkUnit("solo", t.plan.engine, [t],
+                                             pool=t.plan.pool), [])
             elif drain_needed:
                 self.drain()
 
@@ -622,7 +892,28 @@ class GraphAnalyticsService:
                 "retry": {"max_attempts": self.retry.max_attempts,
                           "retries": self.stats["retries"],
                           "dead_letters": self.stats["dead_letters"]},
+                "pools": {p.name: self._pool_metrics(p)
+                          for p in self.pools},
             }
+
+    def _pool_metrics(self, p: PL.DevicePool) -> dict:
+        """One pool's metrics row (caller holds the lock).  On a
+        trivial poolset plans carry ``pool=None``, so the default
+        pool's depths are read from the ``None``-keyed queues — the
+        row always reflects the work actually bound for the pool."""
+        key_pool = None if self.pools.trivial else p.name
+        return {
+            "healthy": p.healthy,
+            "capacity": p.capacity,
+            "max_inflight": p.max_inflight,
+            "inflight": self._pool_gate.inflight(p.name),
+            "queue_depths": {
+                f"{e}.{t}": self._queue_depth_key((key_pool, e, t))
+                for e in self.ENGINE_ORDER for t in self.TIER_ORDER},
+            "transfer_bytes": self._ledger.bytes_for(p.name),
+            "transfers": self._ledger.transfers_for(p.name),
+            "spilled_away": self._pool_spills.get(p.name, 0),
+        }
 
     # -- scheduling internals -----------------------------------------------
     @staticmethod
@@ -645,31 +936,44 @@ class GraphAnalyticsService:
         interactive queues before ANY batch queue, so an interactive
         ticket submitted while batch work is queued is served by the
         next free worker.  Per queue the order is strictly FIFO — a
-        head blocked on a busy (context, engine) parks its whole queue
-        rather than letting younger tickets overtake it.  Dequeued
-        tickets flip to ``running`` before the lock is released, so no
-        two workers (or a worker and an inline ``result``) ever claim
-        the same ticket."""
+        head blocked on a busy (context, pool, engine) or a full pool
+        gate parks its whole queue rather than letting younger tickets
+        overtake it.  Dequeued tickets flip to ``running`` before the
+        lock is released, so no two workers (or a worker and an inline
+        ``result``) ever claim the same ticket.  The returned unit
+        holds a pool-gate slot; the caller releases it after
+        ``_execute_unit``."""
         for tier in self.TIER_ORDER:
             for engine in self.ENGINE_ORDER:
-                q = self._queues.get((engine, tier))
-                while q:
-                    head = q[0]
-                    if head.status != "queued":   # resolved out of band
+                for pool in self._pool_scan_order():
+                    q = self._queues.get((pool, engine, tier))
+                    while q:
+                        head = q[0]
+                        if head.status != "queued":  # resolved elsewhere
+                            q.popleft()
+                            continue
+                        if skip_busy and \
+                                (id(head.context), pool, engine) \
+                                in self._busy:
+                            break                 # queue parked; next one
+                        if not self._pool_gate.try_acquire(pool):
+                            break                 # pool at max_inflight
                         q.popleft()
-                        continue
-                    if skip_busy and \
-                            (id(head.context), engine) in self._busy:
-                        break                     # queue parked; next one
-                    q.popleft()
-                    if tier == "interactive":
-                        head.status = "running"
-                        return _WorkUnit("solo", engine, [head])
-                    group = self._take_fuse_group(q, head)
-                    for t in group:
-                        t.status = "running"
-                    return _WorkUnit("group", engine, group)
+                        if tier == "interactive":
+                            head.status = "running"
+                            return _WorkUnit("solo", engine, [head],
+                                             pool=pool)
+                        group = self._take_fuse_group(q, head)
+                        for t in group:
+                            t.status = "running"
+                        return _WorkUnit("group", engine, group,
+                                         pool=pool)
         return None
+
+    def _pool_scan_order(self) -> tuple:
+        """Queue-key pool axis in deterministic scan order: the
+        ``None`` key (legacy/trivial plans) first, then pool order."""
+        return (None,) + self.pools.names()
 
     @staticmethod
     def _take_fuse_group(queue: Optional[deque],
@@ -711,6 +1015,7 @@ class GraphAnalyticsService:
             try:
                 self._execute_unit(unit, finished)
             finally:
+                self._pool_gate.release(unit.pool)
                 with self._cond:
                     self._inflight -= 1
                     self._busy.discard(unit.busy_key)
@@ -769,6 +1074,7 @@ class GraphAnalyticsService:
             self._finish(t, hit)
             finished.append(t)
             return
+        self._account_transfer(ctx, t.plan)
         r, err = self._run_with_retries(
             lambda: ctx.execute(t.query, t.plan), t.ticket_id, [t])
         if err is not None:
@@ -777,7 +1083,8 @@ class GraphAnalyticsService:
             return
         with self._lock:
             self.stats["executed"] += 1
-            self._cache_put(key, r)
+            # re-key: accounting may have materialized the pool
+            self._cache_put(self._result_key(ctx, t.query), r)
             self._finish(t, r)
             self._log(t.plan.engine, t.tier, [t], fused=False,
                       algorithm=t.query.algorithm)
@@ -806,8 +1113,10 @@ class GraphAnalyticsService:
             for t in run:
                 self._execute_solo(t, finished)
             return
+        self._account_transfer(ctx, run[0].plan)
+        pool = ctx.pool_for_plan(run[0].plan)
         r, err = self._run_with_retries(
-            lambda: ctx.engine(engine).run_batch(
+            lambda: ctx.engine(engine, pool).run_batch(
                 defn, [t.query.params for t in run],
                 count_only=[t.query.count_only for t in run]),
             run[0].ticket_id, run)

@@ -1,0 +1,22 @@
+"""Shared test fixtures.
+
+The planner auto-loads the checked-in reference ``CalibrationProfile``
+(``repro/core/calibration/reference_profile.json``) at import — the
+production default.  The unit suites, however, pin their expectations
+(variant crossovers, tier thresholds, admission estimates) to the
+*analytic* constants, so every test runs with calibration reset to the
+analytic defaults; the reference profile's own coverage lives in the
+dedicated roundtrip tests (``tests/test_pools.py``), which opt back in
+explicitly via ``planner.load_reference_calibration()``.
+"""
+import pytest
+
+from repro.core import planner as P
+
+
+@pytest.fixture(autouse=True)
+def _analytic_calibration():
+    """Pin the analytic planner constants around every test."""
+    P.set_calibration(None)
+    yield
+    P.set_calibration(None)

@@ -1,0 +1,108 @@
+"""Hypothesis property tests for federation placement monotonicity.
+
+The invariant the planner's data-locality term must satisfy: making a
+remote pool *less* attractive — lowering its link bandwidth (raising
+the transfer cost) or revoking the snapshot's residency there — can
+never flip placement *toward* that pool.  Whatever graph shape,
+variant set, or compute scales are in play, the cost model is monotone
+in the transfer term.
+
+``hypothesis`` is an *optional* test dependency (declared under the
+``test`` extra in pyproject.toml); the whole module skips cleanly when
+it is not installed so the tier-1 suite still collects.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep: hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import planner as P  # noqa: E402
+from repro.core import pools as PL  # noqa: E402
+
+
+def _stats(n_vertices, degree):
+    n_edges = n_vertices * degree
+    return P.GraphStats(n_vertices, n_edges, n_edges * 12)
+
+
+def _plan(stats, onprem_bw, cloud_bw, cloud_scale, resident):
+    ps = PL.PoolSet([
+        PL.DevicePool("onprem", link_bandwidth=onprem_bw),
+        PL.DevicePool("cloud", link_bandwidth=cloud_bw,
+                      compute_scale=cloud_scale),
+    ])
+    specs = P.specs_for("pagerank", stats)
+    return P.choose_plan(stats, specs, 4, pools=ps.pools(),
+                         resident=resident)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_vertices=st.integers(100, 10_000_000),
+    degree=st.integers(1, 64),
+    cloud_scale=st.floats(0.01, 2.0),
+    bw=st.floats(1.0, 1e12),
+    shrink=st.floats(1.5, 1e6),
+)
+def test_raising_remote_transfer_cost_never_attracts_work(
+        n_vertices, degree, cloud_scale, bw, shrink):
+    """Snapshot resident on-prem only.  If the planner keeps work on
+    onprem at link bandwidth ``bw``, it must still keep it there at
+    ``bw / shrink`` (a strictly more expensive transfer)."""
+    stats = _stats(n_vertices, degree)
+    before = _plan(stats, bw, bw, cloud_scale, resident={"onprem"})
+    after = _plan(stats, bw / shrink, bw / shrink, cloud_scale,
+                  resident={"onprem"})
+    if before.pool == "onprem":
+        assert after.pool == "onprem"
+    # and the contrapositive: work only ever moves *back* toward the
+    # resident pool as the link degrades
+    if after.pool == "cloud":
+        assert before.pool == "cloud"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_vertices=st.integers(100, 10_000_000),
+    degree=st.integers(1, 64),
+    cloud_scale=st.floats(0.01, 2.0),
+    bw=st.floats(1.0, 1e12),
+)
+def test_revoking_residency_never_attracts_work(
+        n_vertices, degree, cloud_scale, bw):
+    """If the planner avoids the cloud pool while the snapshot is
+    resident there (zero transfer), it must still avoid it once the
+    replica is gone and the same placement costs a transfer."""
+    stats = _stats(n_vertices, degree)
+    both = _plan(stats, bw, bw, cloud_scale,
+                 resident={"onprem", "cloud"})
+    revoked = _plan(stats, bw, bw, cloud_scale, resident={"onprem"})
+    if both.pool == "onprem":
+        assert revoked.pool == "onprem"
+    if revoked.pool == "cloud":
+        assert both.pool == "cloud"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_vertices=st.integers(100, 10_000_000),
+    degree=st.integers(1, 64),
+    cloud_scale=st.floats(0.01, 2.0),
+    bw=st.floats(1.0, 1e12),
+)
+def test_pool_costs_are_what_the_plan_says(
+        n_vertices, degree, cloud_scale, bw):
+    """est_s is exactly scale * engine_estimate + transfer for the
+    chosen placement, and plan_cost reports it."""
+    stats = _stats(n_vertices, degree)
+    plan = _plan(stats, bw, bw, cloud_scale, resident={"onprem"})
+    specs = [s for s in P.specs_for("pagerank", stats)
+             if s.variant == plan.variant]
+    assert len(specs) == 1
+    base = (P.estimate_local_cost(stats, specs[0])
+            if plan.engine == "local"
+            else P.estimate_dist_cost(stats, specs[0], 4))
+    scale = cloud_scale if plan.pool == "cloud" else 1.0
+    expect = scale * base + plan.transfer_s
+    assert plan.est_s == pytest.approx(expect, rel=1e-9)
+    assert P.plan_cost(plan) == plan.est_s

@@ -434,3 +434,47 @@ def test_superstep_variant_digest_parity(graph):
     if out:                                  # CI nondeterminism probe
         with open(out, "a") as f:
             f.write(f"superstep_digest {digest}\n")
+
+
+def test_federation_spill_stress_digest(graph, graph2):
+    """Federation determinism bar, folded into the digest diff: a
+    two-pool service under batch capacity pressure — so a fixed subset
+    of the workload spills to the other pool — drains to byte-identical
+    per-ticket results serial vs ``workers=4``, and the combined digest
+    lands in ``RUNTIME_DIGEST_OUT`` for CI's PYTHONHASHSEED diff."""
+    from repro.core import pools as PL
+
+    def run(workers):
+        svc = GraphAnalyticsService(
+            pools=PL.PoolSet([
+                PL.DevicePool("onprem", capacity=2, max_inflight=2),
+                PL.DevicePool("cloud", capacity=32, compute_scale=1.0),
+            ]),
+            interactive_threshold_s=0.0,   # everything batches
+            cache_size=64)
+        svc.add_graph("g", graph)
+        svc.add_graph("h", graph2)
+        workload = _stress_workload(n_tickets=60, seed=99)
+        tickets = [svc.submit(("g", "h")[name == "dist_g"], q)
+                   for name, q in workload]
+        spilled = svc.stats["spilled"]
+        svc.drain(workers=workers)
+        per = {}
+        for t in tickets:
+            assert t.status == "done", (t.status, t.error)
+            per[t.ticket_id] = _bits(svc.result(t).value)
+        return per, spilled, {t.pool for t in tickets}
+
+    serial, spill_s, pools_s = run(1)
+    conc, spill_c, pools_c = run(4)
+    assert spill_s == spill_c > 0            # pressure really spilled
+    assert pools_s == pools_c == {"onprem", "cloud"}
+    assert serial == conc                    # byte-identical, per ticket
+
+    digest = hashlib.blake2b(
+        b"|".join(serial[k] for k in sorted(serial)),
+        digest_size=16).hexdigest()
+    out = os.environ.get("RUNTIME_DIGEST_OUT")
+    if out:                                  # CI nondeterminism probe
+        with open(out, "a") as f:
+            f.write(f"federation_digest {digest}\n")
