@@ -50,8 +50,15 @@ def pagerank(
     n_model: int = 1,
     sharded: Optional[ShardedCOO] = None,
     dangling: Optional[jax.Array] = None,
+    init: Optional[jax.Array] = None,
 ):
-    """Returns (ranks [V] summing to 1, iterations_run)."""
+    """Returns (ranks [V] summing to 1, iterations_run).
+
+    ``init`` optionally replaces the uniform starting vector (same
+    padded layout as the state) — the warm-start seam.  Power iteration
+    contracts to the same fixpoint from any probability vector, so a
+    warm start changes iterations, never the converged ranks beyond
+    ``tol``."""
     if sharded is None:
         sharded, dangling = _normalize_and_partition(g, n_data, n_model)
     V = g.n_vertices
@@ -84,8 +91,9 @@ def pagerank(
         message=message, combine="sum", apply=apply, identity=0.0,
         halt=halt, global_value=global_value,
     )
-    init = jnp.full((n_model_eff * v_local,) if n_model_eff > 1 else (V,),
-                    1.0 / V, jnp.float32)
+    if init is None:
+        init = jnp.full((n_model_eff * v_local,) if n_model_eff > 1
+                        else (V,), 1.0 / V, jnp.float32)
     state, iters = run_pregel(spec, sharded, init, max_iters, mesh=mesh)
     return state[:V], iters
 
@@ -102,6 +110,42 @@ def _engine_run(eng, alpha, tol, max_iters):
     sharded, dangling = eng.cache[key]
     return pagerank(eng.coo, alpha=alpha, tol=tol, max_iters=max_iters,
                     mesh=eng.mesh, sharded=sharded, dangling=dangling)
+
+
+def _warm_start(eng, params, seed):
+    """Restart the power iteration from an ancestor snapshot's converged
+    ranks: resize to this graph's V (new vertices get the uniform
+    prior), renormalize to a probability vector, and run the standard
+    iteration.  The contraction mapping lands on the same ranks within
+    ``tol`` — only the iteration count shrinks.  Declines (``None``) on
+    a malformed seed, falling back to the cold run."""
+    prev = np.asarray(getattr(seed, "value", seed))
+    V = eng.coo.n_vertices
+    if prev.ndim != 1 or prev.size == 0 or V == 0 \
+            or prev.dtype.kind != "f":
+        return None
+    x = np.full(V, 1.0 / V, dtype=np.float64)
+    n = min(prev.shape[0], V)
+    x[:n] = prev[:n]
+    total = float(x.sum())
+    if not np.isfinite(total) or total <= 0.0:
+        return None
+    x = (x / total).astype(np.float32)
+    key = "pagerank/normalized"
+    if key not in eng.cache:
+        eng.cache[key] = _normalize_and_partition(
+            eng.coo, eng.n_data, eng.n_model)
+    sharded, dangling = eng.cache[key]
+    if sharded.n_model > 1:
+        init = jnp.zeros(sharded.n_model * sharded.v_local,
+                         jnp.float32).at[:V].set(x)
+    else:
+        init = jnp.asarray(x)
+    ranks, iters = pagerank(
+        eng.coo, alpha=params["alpha"], tol=params["tol"],
+        max_iters=params["max_iters"], mesh=eng.mesh,
+        sharded=sharded, dangling=dangling, init=init)
+    return ranks, int(iters)
 
 
 def _cost(g: P.GraphStats, params: dict, count_only: bool) -> P.QuerySpec:
@@ -121,6 +165,7 @@ R.register(R.AlgorithmDef(
     ),
     cost=_cost,
     example_params={"max_iters": 20},
+    warm_start=_warm_start,
     doc="Power-iteration PageRank with dangling-mass redistribution.",
 ))
 

@@ -185,6 +185,54 @@ def _relax_fuse_key(params):
     return ("max_iters", params["max_iters"])
 
 
+def _relax_incremental(spec, eng, sources, seed, delta):
+    """Localized repair for *add-only* deltas: seed distances from the
+    ancestor's converged table (old distances are path lengths still
+    achievable in the new graph, hence elementwise upper bounds) and the
+    frontier from the delta's touched endpoints.  The min relaxation
+    from that state reaches exactly the cold fixpoint — and since every
+    distance is a deterministic along-path float sum, byte-identical to
+    a cold run.  Removals can lengthen distances (values would need to
+    rise), so those decline; so does a run that exhausts its iteration
+    budget before the halt fires (parity is only proven at the
+    fixpoint)."""
+    if delta is None or delta.n_removed:
+        return None
+    prev = np.asarray(getattr(seed, "value", seed))
+    V = eng.coo.n_vertices
+    if prev.ndim != 1 or prev.shape[0] > V or prev.dtype.kind != "f":
+        return None
+    mi = V
+    init = np.full(eng.sharded.n_pad, np.inf, dtype=np.float32)
+    init[: prev.shape[0]] = prev
+    init[np.asarray(sources, dtype=np.int64)] = 0.0
+    act = np.zeros(V, dtype=bool)
+    touched = np.asarray(delta.touched)
+    act[touched[touched < V]] = True
+    dist, iters = eng.run_superstep(spec, jnp.asarray(init), mi,
+                                    variant="auto",
+                                    init_active=jnp.asarray(act))
+    if int(iters) >= mi:
+        return None
+    return dist[:V], int(iters)
+
+
+def _bfs_incremental(eng, params, seed, delta):
+    # an explicit max_iters truncates distances beyond that many hops —
+    # trajectory-dependent semantics a warm seed cannot reproduce
+    if params["max_iters"] is not None:
+        return None
+    return _relax_incremental(_BFS_SPEC, eng, params["sources"], seed,
+                              delta)
+
+
+def _sssp_incremental(eng, params, seed, delta):
+    if params["max_iters"] is not None:
+        return None
+    return _relax_incremental(_SSSP_SPEC, eng, (params["source"],), seed,
+                              delta)
+
+
 def _bfs_cost(g: P.GraphStats, params: dict, count_only: bool):
     # small-world graphs: effective diameter ~ a dozen supersteps
     iters = min(12, params.get("max_iters") or 12)
@@ -215,6 +263,7 @@ R.register(R.AlgorithmDef(
     variants=R.superstep_variants(_BFS_SPEC),
     batch_runner=_bfs_batch,
     fuse=_relax_fuse_key,
+    incremental=_bfs_incremental,
     example_params={"sources": (0,)},
     doc="Hop distances from a source set along directed edges.",
 ))
@@ -231,6 +280,7 @@ R.register(R.AlgorithmDef(
     variants=R.superstep_variants(_SSSP_SPEC),
     batch_runner=_sssp_batch,
     fuse=_relax_fuse_key,
+    incremental=_sssp_incremental,
     example_params={"source": 0},
     doc="Single-source weighted shortest paths (non-negative weights).",
 ))

@@ -291,6 +291,33 @@ def _kcore_cost(g: P.GraphStats, params: dict, count_only: bool):
                              iterations=iters, state_bytes_per_vertex=4.0)
 
 
+def _kcore_incremental(eng, params, seed, delta):
+    """Localized repair for *removal-only* deltas: removing edges can
+    only shrink the core (any subgraph with min degree >= k in the new
+    graph had it in the old one), so ``core_new ⊆ core_old`` and
+    peeling the new graph *from the old membership* reaches the k-core
+    of the old core's induced subgraph — which is exactly ``core_new``.
+    Membership is a canonical bool vector, so the repaired result is
+    byte-identical to a cold peel from all-alive.  Added edges can grow
+    the core (dropped vertices would need to resurrect), so those
+    decline, as does an explicit iteration cap (truncated-peeling
+    semantics) or a budget-exhausted run."""
+    if delta is None or delta.n_added or params["max_iters"] is not None:
+        return None
+    prev = np.asarray(getattr(seed, "value", seed))
+    V = eng.coo.n_vertices
+    if prev.ndim != 1 or prev.shape[0] != V or prev.dtype != np.bool_:
+        return None
+    mi = V
+    init = np.zeros(eng.sharded.n_pad, dtype=np.float32)
+    init[:V] = prev.astype(np.float32)
+    alive, iters = eng.run_superstep(_kcore_spec(int(params["k"])),
+                                     jnp.asarray(init), mi, variant="auto")
+    if int(iters) >= mi:
+        return None
+    return alive[:V] > 0.5, int(iters)
+
+
 R.register(R.AlgorithmDef(
     name="k_core",
     run=_kcore_run,
@@ -305,6 +332,7 @@ R.register(R.AlgorithmDef(
               "fused": _kcore_variant("fused"),
               "frontier": _kcore_variant("frontier")},
     requires_symmetric=True,
+    incremental=_kcore_incremental,
     example_params={"k": 3},
     doc="k-core membership via degree peeling to fixpoint.",
 ))

@@ -227,7 +227,7 @@ class Engine:
         return V * kmax * 9 <= SUPERSTEP_ELL_BUDGET
 
     def run_superstep(self, spec: PregelSpec, init_state, max_iters: int,
-                      variant: Optional[str] = None):
+                      variant: Optional[str] = None, init_active=None):
         """Single dispatch point for superstep execution strategies.
 
         ``'dense'``/``None`` is the existing gather/segment-combine path
@@ -237,6 +237,12 @@ class Engine:
         no, so a planner-forced variant never errors and the variants
         contract (identical results everywhere) holds unconditionally.
         ``'auto'`` prefers frontier, then fused, then dense.
+
+        ``init_active`` (optional ``bool [V]``) seeds the frontier
+        variant's first active set — the incremental-maintenance seam.
+        The dense and fused paths recompute every vertex each round
+        regardless, so the seed only narrows work where narrowing is
+        exact; every variant still lands on the same fixpoint.
         """
         v = variant or "dense"
         if v == "auto":
@@ -254,7 +260,9 @@ class Engine:
         if v == "frontier" and self.superstep_supported(spec, "frontier"):
             V = self.coo.n_vertices
             return run_pregel_frontier(
-                spec, self.superstep_ell("out"), init_state[:V], max_iters)
+                spec, self.superstep_ell("out"), init_state[:V], max_iters,
+                init_active=(None if init_active is None
+                             else init_active[:V]))
         return run_pregel(spec, self.sharded, init_state, max_iters,
                           mesh=self.mesh)
 
@@ -316,7 +324,8 @@ class Engine:
     # -- generic execution --------------------------------------------------
     def run(self, algorithm, params: Optional[dict] = None,
             count_only: bool = False,
-            variant: Optional[str] = None) -> QueryResult:
+            variant: Optional[str] = None,
+            seed=None, delta=None) -> QueryResult:
         """Execute any registered algorithm on this engine's graph.
 
         ``variant`` selects one of the definition's registered execution
@@ -325,6 +334,17 @@ class Engine:
         the cheapest feasible variant for *its own* graph via the cost
         hook — so a direct ``eng.triangle_count()`` on a huge graph
         takes the linear-memory path without a planner in sight.
+
+        ``seed`` is an ancestor snapshot's cached result for the same
+        query (any object with ``.value``); ``delta`` the
+        ``GraphDelta`` between that ancestor and this engine's graph.
+        With both present and the definition declaring an
+        ``incremental`` hook, the engine repairs the seed against the
+        delta; with only a seed and a ``warm_start`` hook, it restarts
+        the fixpoint from the seed.  Either hook may decline (return
+        ``None``) — execution falls back to the cold runner, so seeds
+        affect time, never correctness.  ``meta['mode']`` records the
+        realized path ('incremental' | 'warm').
         """
         defn = R.get(algorithm) if isinstance(algorithm, str) else algorithm
         if self.name not in defn.engines:
@@ -336,6 +356,7 @@ class Engine:
             G.require_symmetric(self.coo, defn.name)
         if variant is None and defn.variants:
             variant = self._select_variant(defn, p, count_only)
+        mode = None
         with self._exec_lock, self._device_scope():
             self.n_runs += 1
             # the fault-injection seam: per attempt, so the service's
@@ -344,10 +365,28 @@ class Engine:
             if count_only and defn.count_run is not None:
                 value, iters = self._invoke(defn.count_run, defn, p)
                 return QueryResult(value, self.name, iters)
-            value, iters = self._invoke(defn.runner_for(variant), defn, p)
+            got = None
+            if seed is not None and delta is not None \
+                    and defn.incremental is not None:
+                got = defn.incremental(self, p, seed, delta)
+                if got is not None:
+                    mode = "incremental"
+            if got is None and seed is not None \
+                    and defn.warm_start is not None:
+                got = defn.warm_start(self, p, seed)
+                if got is not None:
+                    mode = "warm"
+            if got is not None:
+                value, iters = got
+                iters = int(iters) if iters is not None else None
+            else:
+                value, iters = self._invoke(defn.runner_for(variant),
+                                            defn, p)
         if count_only and defn.count is not None:
             value = defn.count(value)
         meta = {"variant": variant} if variant is not None else {}
+        if mode is not None:
+            meta["mode"] = mode
         return QueryResult(value, self.name, iters, meta)
 
     def run_batch(self, algorithm, params_list,

@@ -41,6 +41,42 @@ import numpy as np
 Array = jax.Array
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphDelta:
+    """One snapshot-to-snapshot edge edit, as applied by
+    :meth:`GraphCOO.apply_delta`.
+
+    ``added``/``removed`` are ``[n, 2]`` int64 host arrays of logical
+    (src, dst) pairs — *before* symmetrization, so an undirected graph's
+    delta records each touched undirected edge once.  ``touched`` is the
+    sorted unique endpoint set of every changed edge: the seed frontier
+    for incremental algorithm maintenance, and the planner's estimate of
+    how much of the graph an incremental recompute must visit.
+    """
+
+    added: np.ndarray      # [n_added, 2] int64
+    removed: np.ndarray    # [n_removed, 2] int64
+    touched: np.ndarray    # [n_touched] int32, sorted unique endpoints
+
+    @property
+    def n_added(self) -> int:
+        return int(self.added.shape[0])
+
+    @property
+    def n_removed(self) -> int:
+        return int(self.removed.shape[0])
+
+    @property
+    def n_touched(self) -> int:
+        return int(self.touched.shape[0])
+
+    def nbytes(self) -> int:
+        """Bytes a consumer must ingest to apply this delta — the
+        planner's incremental-path transfer term."""
+        return int(self.added.nbytes + self.removed.nbytes
+                   + self.touched.nbytes)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GraphCOO:
@@ -95,6 +131,84 @@ class GraphCOO:
             d = h.hexdigest()
             self._content_digest = d
         return d
+
+    def apply_delta(
+        self,
+        added=None,
+        removed=None,
+        added_w: Optional[np.ndarray] = None,
+        pad_multiple: int = 1024,
+    ) -> "GraphCOO":
+        """Edit the edge set without re-landing the snapshot: returns a
+        new canonical :class:`GraphCOO` with recorded lineage.
+
+        ``added``/``removed`` are iterables of logical (src, dst) pairs
+        (anything ``np.asarray`` reshapes to ``[n, 2]``).  On a
+        symmetric graph each logical pair stands for the undirected
+        edge — both directions are edited.  Removals apply before
+        additions, so remove+add of the same pair is a weight update;
+        adding an edge that already exists is a no-op (the existing
+        weight wins, matching ``build_coo``'s first-occurrence dedup).
+
+        Because the result routes through ``build_coo``'s
+        canonicalization (dedup + destination sort), its
+        ``content_digest`` is **bit-identical** to building the edited
+        edge list from scratch — lineage-equal graphs are cache-equal.
+        The new graph carries ``parent_digest`` (this graph's digest)
+        and ``delta`` (a :class:`GraphDelta`) as plain host attributes
+        for the catalog's lineage chain and the planner's
+        incremental-vs-full pricing.
+        """
+        def _pairs(edges) -> np.ndarray:
+            if edges is None:
+                return np.zeros((0, 2), dtype=np.int64)
+            e = np.asarray(edges, dtype=np.int64)
+            return e.reshape(-1, 2) if e.size else np.zeros((0, 2),
+                                                            dtype=np.int64)
+
+        add = _pairs(added)
+        rem = _pairs(removed)
+        V = self.n_vertices
+        for name, e in (("added", add), ("removed", rem)):
+            if e.size and (e.min() < 0 or e.max() >= V):
+                raise ValueError(
+                    f"apply_delta: {name} edge endpoints must lie in "
+                    f"[0, {V}); got range [{e.min()}, {e.max()}]")
+        touched = np.unique(
+            np.concatenate([add.ravel(), rem.ravel()])).astype(np.int32)
+
+        if added_w is None:
+            add_w = np.ones(add.shape[0], dtype=np.float32)
+        else:
+            add_w = np.asarray(added_w, dtype=np.float32).reshape(-1)
+            if add_w.shape[0] != add.shape[0]:
+                raise ValueError("apply_delta: added_w length mismatch")
+        add_s, add_d = add[:, 0], add[:, 1]
+        rem_s, rem_d = rem[:, 0], rem[:, 1]
+        if self.symmetric:
+            add_s, add_d = (np.concatenate([add_s, add_d]),
+                            np.concatenate([add_d, add_s]))
+            add_w = np.concatenate([add_w, add_w])
+            rem_s, rem_d = (np.concatenate([rem_s, rem_d]),
+                            np.concatenate([rem_d, rem_s]))
+
+        src = np.asarray(self.src)[: self.n_edges].astype(np.int64)
+        dst = np.asarray(self.dst)[: self.n_edges].astype(np.int64)
+        w = np.asarray(self.w)[: self.n_edges]
+        stride = np.int64(V + 1)
+        if rem_s.size:
+            keep = ~np.isin(src * stride + dst, rem_s * stride + rem_d)
+            src, dst, w = src[keep], dst[keep], w[keep]
+        new = build_coo(
+            np.concatenate([src, add_s]), np.concatenate([dst, add_d]), V,
+            w=np.concatenate([w, add_w]), pad_multiple=pad_multiple,
+            symmetrize=False, dedup=True)
+        # symmetric is digest-header metadata: restore it before any
+        # digest is computed so lineage-equal graphs stay cache-equal
+        new.symmetric = self.symmetric
+        new.parent_digest = self.content_digest()
+        new.delta = GraphDelta(added=add, removed=rem, touched=touched)
+        return new
 
 
 @jax.tree_util.register_pytree_node_class

@@ -288,10 +288,21 @@ class Plan:
     # poolset-free path).  est_s: the chosen pool's *total* estimate —
     # compute (scaled by the pool's compute_scale) plus transfer_s, the
     # data-locality term (0 when the snapshot is resident on the pool,
-    # else bytes_coo / pool.link_bandwidth).
+    # else bytes_coo / pool.link_bandwidth).  ``price_incremental`` also
+    # writes est_s when it flips the mode, so ``plan_cost`` always
+    # reflects the path the plan actually prescribes.
     pool: Optional[str] = None
     est_s: Optional[float] = None
     transfer_s: float = 0.0
+    # -- incremental axis ---------------------------------------------------
+    # 'full' recomputes from scratch; 'incremental' seeds a localized
+    # repair from the parent snapshot's result + the recorded delta;
+    # 'warm' restarts a fixpoint from an ancestor's converged vector.
+    # Execution treats non-full modes as advisory: an algorithm hook
+    # that declines (removals under an add-only repair, exhausted
+    # iteration budget) falls back to the cold run, so the mode affects
+    # cost estimates and tiering, never correctness.
+    mode: str = "full"
 
 
 def estimate_local_cost(g: GraphStats, q: QuerySpec,
@@ -339,6 +350,98 @@ def plan_cost(plan: Plan) -> float:
     if plan.est_s is not None:
         return plan.est_s
     return plan.est_local_s if plan.engine == "local" else plan.est_dist_s
+
+
+# -- incremental-vs-full pricing -------------------------------------------
+#
+# The repair wavefront from a delta's touched vertices does not stay on
+# those vertices: each superstep it can spill one hop outward.  The
+# analytic stand-in multiplies the touched fraction by a constant
+# expansion factor — crude, but it creates the crossover the catalog
+# needs (a 0.1% delta prices far below a full recompute, a 30% delta
+# prices above it).  Warm starts run the *full* iteration body, just
+# fewer rounds; power iterations on the daily graph typically restart
+# within a constant fraction of the cold iteration count.
+INCR_WAVEFRONT_EXPANSION = 4.0
+WARM_ITER_FRACTION = 0.5
+
+
+def full_traffic_cost(g: GraphStats, q: QuerySpec,
+                      profile: Optional[CalibrationProfile] = None) -> float:
+    """The cold run's edge/state traffic seconds — the *variable* term
+    of :func:`estimate_local_cost`, without the fixed dispatch and
+    output-egress costs a seeded run pays identically."""
+    pr = profile or _ACTIVE_PROFILE
+    touched = (g.bytes_coo * q.edge_bytes_factor
+               + q.state_bytes_per_vertex * g.n_vertices) * q.iterations
+    return pr.scale(q.algorithm) * touched / pr.hbm_bw
+
+
+def estimate_incremental_cost(g: GraphStats, q: QuerySpec, delta,
+                              profile: Optional[CalibrationProfile] = None,
+                              ) -> float:
+    """Traffic seconds of a localized incremental repair: the repair
+    wavefront touches ``frac`` of the per-round edge/state traffic and
+    converges in proportionally fewer rounds (it must re-cover the
+    touched region, not the whole graph's diameter).  At ``frac=1``
+    the estimate degenerates to :func:`full_traffic_cost`, so huge
+    deltas always price ``'full'``.  The delta bytes themselves are
+    NOT charged here — they were ingested once when the snapshot was
+    registered (``delta size x touched-frontier estimate`` is the
+    comparison, amortized over every query the version serves).
+    ``delta`` needs ``n_touched`` — :class:`repro.core.graph.
+    GraphDelta` or anything shaped like it."""
+    pr = profile or _ACTIVE_PROFILE
+    V = max(g.n_vertices, 1)
+    frac = min(1.0, INCR_WAVEFRONT_EXPANSION * delta.n_touched / V)
+    iters = max(1.0, q.iterations * frac)
+    touched = (g.bytes_coo * q.edge_bytes_factor
+               + q.state_bytes_per_vertex * g.n_vertices) * frac * iters
+    return pr.scale(q.algorithm) * touched / pr.hbm_bw
+
+
+def price_incremental(plan: Plan, g: GraphStats, q: QuerySpec,
+                      delta=None, seed_mode: Optional[str] = None,
+                      profile: Optional[CalibrationProfile] = None) -> Plan:
+    """Re-price ``plan`` given an available warm-start seed.
+
+    ``seed_mode`` is what the catalog found: ``'incremental'`` (the
+    direct parent's converged result plus the recorded delta) or
+    ``'warm'`` (an ancestor's converged vector, no usable delta).  The
+    comparison is between the two *traffic* terms — fixed dispatch and
+    output egress are identical either way and cancel.  When the
+    repair's traffic beats the cold traffic the plan's ``mode`` flips
+    and ``est_s`` carries the adjusted total; a delta too large to win
+    keeps ``mode='full'`` (ties too — the cold path needs no seed
+    plumbing).  Applied exactly once per plan, at the end of the
+    planning pipeline.  ``None`` seed_mode returns the plan
+    untouched."""
+    if seed_mode is None:
+        return plan
+    full = plan_cost(plan)
+    if seed_mode == "incremental" and delta is not None:
+        cold_traffic = full_traffic_cost(g, q, profile)
+        inc_traffic = estimate_incremental_cost(g, q, delta, profile)
+        if inc_traffic < cold_traffic:
+            est = max(full - cold_traffic + inc_traffic, 0.0)
+            return dataclasses.replace(
+                plan, mode="incremental", est_s=est,
+                reason=f"incremental repair ({delta.n_touched} touched, "
+                       f"{est*1e3:.2f} ms vs full {full*1e3:.2f} ms); "
+                       f"{plan.reason}")
+        return dataclasses.replace(
+            plan,
+            reason=f"full recompute beats incremental (traffic "
+                   f"{cold_traffic*1e3:.3f} ms vs {inc_traffic*1e3:.3f} "
+                   f"ms); {plan.reason}")
+    if seed_mode == "warm":
+        warm = full * WARM_ITER_FRACTION
+        return dataclasses.replace(
+            plan, mode="warm", est_s=warm,
+            reason=f"warm start from ancestor result "
+                   f"(~{warm*1e3:.2f} ms vs cold {full*1e3:.2f} ms); "
+                   f"{plan.reason}")
+    return plan
 
 
 def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:

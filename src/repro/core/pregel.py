@@ -552,6 +552,7 @@ def run_pregel_frontier(
     init_state: Array,
     max_iters: int,
     block_rows: int = 1024,
+    init_active: Optional[Array] = None,
 ):
     """Run the vertex program with frontier compression.
 
@@ -580,6 +581,15 @@ def run_pregel_frontier(
     The apply/halt/global_value hooks run densely over the full state,
     so padding-free [V] semantics, iteration counts, and gval match the
     dense path element for element.
+
+    ``init_active`` (monotone mode only) overrides the first frontier
+    with an explicit ``bool [V]`` mask — the incremental-maintenance
+    seam: a warm ``init_state`` taken from a previous fixpoint plus an
+    ``init_active`` of the delta's touched vertices runs only the
+    repair wavefront.  Exact under the same monotone invariant, because
+    an old-fixpoint state already reflects every untouched source's
+    message (the fold made it permanent last snapshot).  Ignored in
+    delta mode, where round 1 must scatter the full sum regardless.
     """
     _check_superstep_spec(spec, "run_pregel_frontier")
     mode = spec.frontier_mode
@@ -599,8 +609,9 @@ def run_pregel_frontier(
     F = ((V + B - 1) // B) * B          # packed-frontier capacity
     trailing = init_state.shape[1:]
     delta = mode == "delta"
+    seeded = init_active is not None and not delta
 
-    def body(nbr, msk, w, state):
+    def body(nbr, msk, w, state, *extra):
         ids = jnp.arange(V, dtype=jnp.int32)
         valid = ids < V
         probe = jax.eval_shape(
@@ -669,6 +680,8 @@ def run_pregel_frontier(
 
         if delta:
             act0 = jnp.ones((V,), bool)     # round 1 seeds the full sum
+        elif seeded:
+            act0 = extra[0]
         elif spec.frontier_init is not None:
             act0 = reduce_active(spec.frontier_init(state))
         else:
@@ -709,9 +722,10 @@ def run_pregel_frontier(
         return out[0], out[-2]
 
     key = ("frontier", spec, max_iters, V, K, B,
-           init_state.shape, str(init_state.dtype))
+           init_state.shape, str(init_state.dtype), seeded)
     fn, key = _jit_cache_get(key)
     if fn is None:
         fn = jax.jit(body)
         _jit_cache_put(key, fn)
-    return fn(ell.nbr, ell.mask, ell.w, init_state)
+    args = (jnp.asarray(init_active, bool),) if seeded else ()
+    return fn(ell.nbr, ell.mask, ell.w, init_state, *args)

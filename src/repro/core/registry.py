@@ -113,6 +113,23 @@ class AlgorithmDef:
     example_params : a representative parameter set (satisfying the
               schema) used by the generic benchmark sweep and the parity
               test suite; ``None`` opts out of generic sweeps.
+    warm_start : optional seeded runner
+              ``(engine, params, seed) -> (value, iterations) | None``
+              for fixpoint algorithms that can start iterating from a
+              previous snapshot's converged result (``seed`` is a
+              ``CachedResult``-like object with ``.value``).  Returning
+              ``None`` declines — the engine falls back to the cold
+              runner, so a bad seed can cost time but never correctness.
+              The answer must equal the cold answer within the
+              algorithm's stated tolerance; only iterations may differ.
+    incremental : optional delta-maintenance runner
+              ``(engine, params, seed, delta) -> (value, iters) | None``
+              for algorithms that can repair a previous result against a
+              ``GraphDelta`` (seeding the frontier from
+              ``delta.touched``) instead of recomputing the whole graph.
+              Must be *exact*: byte-identical to cold recompute, or
+              decline with ``None`` (e.g. a monotone-add algorithm
+              handed a delta containing removals).
     """
 
     name: str
@@ -132,6 +149,8 @@ class AlgorithmDef:
     example_params: Optional[Mapping[str, Any]] = dataclasses.field(
         default_factory=dict)
     doc: str = ""
+    warm_start: Optional[Callable[..., Optional[tuple]]] = None
+    incremental: Optional[Callable[..., Optional[tuple]]] = None
 
     @property
     def has_count_path(self) -> bool:

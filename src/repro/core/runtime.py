@@ -246,3 +246,42 @@ class TransferLedger:
             return {p: {"transfer_bytes": self._bytes.get(p, 0),
                         "transfers": self._count.get(p, 0)}
                     for p in sorted(set(self._bytes) | set(self._count))}
+
+
+class IncrementalMeter:
+    """Thread-safe counters for the incremental/warm-start execution
+    paths: how often the catalog's lineage actually paid off.
+
+    ``warm_hits`` counts executions seeded from an ancestor's converged
+    vector; ``incremental_runs`` counts localized repairs seeded from
+    the direct parent's result plus the recorded delta;
+    ``iterations_saved`` accumulates the per-run iteration reduction
+    (the seed's converged iteration count minus the seeded run's — the
+    ancestor's cold cost standing in for this snapshot's, since the
+    whole point is never paying the cold run); ``delta_bytes_applied``
+    accumulates the delta payloads consumed by incremental repairs.
+    """
+
+    def __init__(self):
+        self._warm = 0
+        self._incremental = 0
+        self._iters_saved = 0
+        self._delta_bytes = 0
+        self._lock = threading.Lock()
+
+    def record(self, mode: str, iterations_saved: int = 0,
+               delta_bytes: int = 0) -> None:
+        with self._lock:
+            if mode == "warm":
+                self._warm += 1
+            elif mode == "incremental":
+                self._incremental += 1
+            self._iters_saved += max(int(iterations_saved), 0)
+            self._delta_bytes += max(int(delta_bytes), 0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"warm_hits": self._warm,
+                    "incremental_runs": self._incremental,
+                    "iterations_saved": self._iters_saved,
+                    "delta_bytes_applied": self._delta_bytes}

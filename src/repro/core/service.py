@@ -46,6 +46,22 @@ module is that service tier:
   histograms, cache hit rates, fusion widths and retry/dead-letter
   counters under one lock — the in-process analogue of the exemplar
   queue-worker stacks' Prometheus gauges.
+* **Time-versioned catalog** — ``add_snapshot(name, ..., as_of=...)``
+  registers the daily reload of a graph as a new *version* of the same
+  catalog name, either from full bytes or from a delta applied to the
+  previous version (``added=``/``removed=`` edge lists).  Versions form
+  a lineage chain through each snapshot's recorded ``parent_digest``;
+  ``submit``/``call`` take ``as_of`` and resolve the newest version at
+  or before that timestamp.  When a query arrives for a snapshot whose
+  ancestor already answered the same query, the catalog finds that
+  result through the digest-keyed result cache and hands it to the
+  engine as a *seed*: exact monotone algorithms run a localized
+  incremental repair from the delta's touched vertices (byte-identical
+  to the cold run), fixpoint algorithms warm-start from the converged
+  vector (same answer within tolerance, fewer iterations).  The
+  planner prices incremental-vs-full per query
+  (:func:`~repro.core.planner.price_incremental`), so an over-large
+  delta falls back to a full recompute.
 * **Federation** — a service built over a non-trivial
   :class:`~repro.core.pools.PoolSet` plans every query over
   (pool, engine, variant): ``add_graph(..., pools=[...])`` declares
@@ -134,6 +150,9 @@ class QueryTicket:
     attempts: int = 0
     queued_at: float = dataclasses.field(default=0.0, repr=False)
     pool: Optional[str] = None    # placement pool (None = legacy/trivial)
+    # warm-start seed (an ancestor snapshot's QueryResult) pinned at
+    # submit for plans whose mode is not 'full'; None otherwise
+    seed: Any = dataclasses.field(default=None, repr=False)
 
 
 class GraphContext:
@@ -319,20 +338,29 @@ class GraphContext:
             return None
         return self._pools.pools()
 
-    def plan(self, q) -> P.Plan:
+    def plan(self, q, seed_mode: Optional[str] = None) -> P.Plan:
         """Cost every (pool, engine, variant) placement and pick one
         (cached per query shape; the cache is cleared on measurement,
-        calibration, pool-health and residency changes)."""
+        calibration, pool-health and residency changes).
+
+        ``seed_mode`` (from the service's lineage lookup) prices the
+        incremental/warm path against the chosen full recompute —
+        :func:`~repro.core.planner.price_incremental`.  It joins the
+        cache key: the same query shape plans differently once an
+        ancestor's result appears in the cache, and the delta itself is
+        immutable per context (``self.coo.delta``) so it need not."""
         with self._lock:
             stats = self.current_stats()
-            key = self._query_key(q)
+            qkey = self._query_key(q)
+            key = None if qkey is None else (qkey, seed_mode)
             if key is not None and key in self._plan_cache:
                 self._plan_cache.move_to_end(key)
                 return self._plan_cache[key]
             pools = self._placement_pools()
             plan = self._plan_uncached(
                 q, stats, pools,
-                self.residency if pools is not None else None)
+                self.residency if pools is not None else None,
+                seed_mode=seed_mode)
             if key is not None and self._plan_cache_size:
                 self._plan_cache[key] = plan
                 while len(self._plan_cache) > self._plan_cache_size:
@@ -348,14 +376,26 @@ class GraphContext:
             pools = [self._pools.get(n) for n in pool_names]
             return self._plan_uncached(q, stats, pools, self.residency)
 
-    def _plan_uncached(self, q, stats, pools, resident) -> P.Plan:
+    def _plan_uncached(self, q, stats, pools, resident,
+                       seed_mode: Optional[str] = None) -> P.Plan:
         """One planning pipeline for both the legacy and the pool-aware
         paths: cost-model choice, then force_engine, then the
         capability clamp (which wins over both), then variant re-pick
-        for the overridden engine."""
+        for the overridden engine, then — exactly once, on the final
+        plan — the incremental-vs-full pricing."""
         defn = R.get(q.algorithm)
         specs = P.specs_for(q.algorithm, stats,
                             count_only=q.count_only, **q.params)
+
+        def priced(plan):
+            if seed_mode is None:
+                return plan
+            spec = next((s for s in specs if s.variant == plan.variant),
+                        specs[0])
+            return P.price_incremental(
+                plan, stats, spec, delta=getattr(self.coo, "delta", None),
+                seed_mode=seed_mode)
+
         if pools is None:
             plan = P.choose_plan(stats, specs, self.n_chips)
         else:
@@ -370,7 +410,7 @@ class GraphContext:
             target = defn.engines[0]
             why = f"{q.algorithm} runs on {'/'.join(defn.engines)} only"
         if target is None:
-            return plan
+            return priced(plan)
         if pools is not None:
             # re-run the placement with the engine axis pinned, so the
             # override still picks the best (pool, variant) for it
@@ -378,20 +418,31 @@ class GraphContext:
                 plan = P.choose_plan(stats, specs, self.n_chips,
                                      pools=pools, resident=resident,
                                      engines=(target,))
-            return dataclasses.replace(plan,
-                                       reason=f"{why}; {plan.reason}")
+            return priced(dataclasses.replace(
+                plan, reason=f"{why}; {plan.reason}"))
         plan = dataclasses.replace(plan, engine=target, reason=why)
         if len(specs) > 1 and target != chosen_engine:
             # engine was overridden: re-pick its cheapest variant
             best = P.best_spec_for_engine(stats, specs, target,
                                           self.n_chips)
             plan = dataclasses.replace(plan, variant=best.variant)
-        return plan
+        return priced(plan)
 
-    def execute(self, q, plan: P.Plan) -> QueryResult:
+    def execute(self, q, plan: P.Plan, seed=None) -> QueryResult:
+        """Run the plan.  ``seed`` (an ancestor snapshot's QueryResult)
+        is forwarded to the engine only for non-full plans; incremental
+        plans also hand over this snapshot's recorded delta so the
+        algorithm's localized-repair hook can seed its frontier.  A
+        hook that declines falls back to the cold run inside
+        ``Engine.run`` — the answer is the same either way."""
+        kw = {}
+        if seed is not None and plan.mode != "full":
+            kw["seed"] = seed
+            if plan.mode == "incremental":
+                kw["delta"] = getattr(self.coo, "delta", None)
         r = self.engine(plan.engine, self.pool_for_plan(plan)).run(
             q.algorithm, q.params, count_only=q.count_only,
-            variant=plan.variant)
+            variant=plan.variant, **kw)
         r.meta["plan"] = plan
         return r
 
@@ -462,6 +513,13 @@ class GraphAnalyticsService:
         self._name_pools: dict[str, tuple] = {}   # name -> declared pools
         self._catalog: dict[str, GraphContext] = {}
         self._by_digest: dict[tuple, GraphContext] = {}
+        # -- time-versioned catalog: name -> [version dicts] sorted by
+        # as_of (each {'as_of', 'ctx', 'digest', 'parent'}), plus a
+        # digest -> context index for walking lineage chains when a
+        # query hunts for an ancestor's cached result to seed from
+        self._versions: dict[str, list] = {}
+        self._digest_ctx: dict[str, GraphContext] = {}
+        self._meter = RT.IncrementalMeter()
         self.cache_size = cache_size
         self._result_cache: OrderedDict = (
             OrderedDict() if result_cache is None else result_cache)
@@ -593,18 +651,165 @@ class GraphAnalyticsService:
         cache keys) that priced the old topology are invalidated."""
         return self.pools.set_health(name, healthy)
 
+    # -- time-versioned catalog ---------------------------------------------
+    def add_snapshot(self, name: str, coo: Optional[G.GraphCOO] = None, *,
+                     as_of=None, added=None, removed=None, added_w=None,
+                     **kw) -> GraphContext:
+        """Register one *version* of the rolling snapshot ``name``.
+
+        Two forms:
+
+        * ``add_snapshot(name, coo, as_of=t)`` — full bytes.  If ``coo``
+          came out of :meth:`~repro.core.graph.GraphCOO.apply_delta` its
+          recorded ``parent_digest``/``delta`` lineage rides along.
+        * ``add_snapshot(name, as_of=t, added=..., removed=...)`` — the
+          daily-delta form: the edge lists are applied to the *latest*
+          registered version of ``name`` (``GraphCOO.apply_delta``), so
+          the catalog never rebuilds the unchanged bulk of the graph.
+
+        ``as_of`` is any totally ordered timestamp (int day number, ISO
+        date string, ...) and must be strictly greater than the previous
+        version's; it defaults to ``last + 1`` (or 0 for the first
+        version).  The bare catalog name always resolves to the newest
+        version; ``context``/``call``/``submit`` accept ``as_of`` to pin
+        an older one.  Engine keyword arguments (``mesh``, ``pools``,
+        ``force_engine``, ...) pass through to :meth:`add_graph`.
+        """
+        with self._lock:
+            chain = self._versions.get(name, [])
+            if coo is None:
+                if added is None and removed is None:
+                    raise ValueError(
+                        "add_snapshot needs either a graph or a delta "
+                        "(added=/removed= edge lists)")
+                if not chain:
+                    raise KeyError(
+                        f"no base version of {name!r} to apply a delta "
+                        f"to; register the first snapshot with full bytes")
+                coo = chain[-1]["ctx"].coo.apply_delta(
+                    added=added, removed=removed, added_w=added_w)
+            elif added is not None or removed is not None:
+                raise ValueError(
+                    "pass either a graph or added=/removed=, not both")
+            if as_of is None:
+                as_of = chain[-1]["as_of"] + 1 if chain else 0
+            if chain and not chain[-1]["as_of"] < as_of:
+                raise ValueError(
+                    f"snapshot versions must advance: as_of {as_of!r} is "
+                    f"not after {name!r}'s latest {chain[-1]['as_of']!r}")
+            ctx = self.add_graph(name, coo, **kw)
+            digest = coo.content_digest()
+            self._versions.setdefault(name, []).append({
+                "as_of": as_of, "ctx": ctx, "digest": digest,
+                "parent": getattr(coo, "parent_digest", None)})
+            self._digest_ctx[digest] = ctx
+            return ctx
+
+    def snapshot_versions(self, name: str) -> list:
+        """The registered ``as_of`` timestamps of ``name``, oldest
+        first (empty for graphs added via plain ``add_graph``)."""
+        with self._lock:
+            return [e["as_of"] for e in self._versions.get(name, ())]
+
     def graph_names(self) -> list[str]:
         with self._lock:
             return sorted(self._catalog)
 
-    def context(self, graph_name: str) -> GraphContext:
+    def context(self, graph_name: str, as_of=None) -> GraphContext:
+        """The context serving ``graph_name`` — its newest version, or
+        with ``as_of`` the newest *version at or before* that timestamp
+        (catalog time travel; older versions stay queryable after the
+        bare name moved on)."""
         with self._lock:
+            if as_of is not None:
+                chain = self._versions.get(graph_name)
+                if not chain:
+                    raise KeyError(
+                        f"graph {graph_name!r} has no time-versioned "
+                        f"snapshots (register them with add_snapshot); "
+                        f"catalog: {self.graph_names()}")
+                cands = [e for e in chain if e["as_of"] <= as_of]
+                if not cands:
+                    raise KeyError(
+                        f"no version of {graph_name!r} at or before "
+                        f"{as_of!r}; versions: "
+                        f"{[e['as_of'] for e in chain]}")
+                return cands[-1]["ctx"]
             try:
                 return self._catalog[graph_name]
             except KeyError:
                 raise KeyError(
                     f"unknown graph {graph_name!r}; catalog: "
                     f"{self.graph_names()}") from None
+
+    # -- lineage seeding ----------------------------------------------------
+    def _peek_ancestor_result(self, digest: str, qkey) \
+            -> Optional[QueryResult]:
+        """The cached result of ``qkey`` on the snapshot whose content
+        digest is ``digest``, without touching hit/miss counters or LRU
+        order — a seed probe, not a cache hit."""
+        ctx = self._digest_ctx.get(digest)
+        if ctx is None:
+            return None
+        key = (digest, ctx.residency_generation,
+               self.pools.generation) + qkey
+        with self._lock:
+            return self._result_cache.get(key)
+
+    def _seed_for(self, ctx: GraphContext, q):
+        """Hunt the lineage chain for a warm-start seed for ``q`` on
+        ``ctx``'s snapshot.  Returns ``(seed, mode)``:
+
+        * ``(result, 'incremental')`` — the *direct parent* answered
+          ``q`` and this snapshot records the delta that produced it
+          (the only ancestor whose delta describes the edit, so the
+          only one a localized repair may seed from);
+        * ``(result, 'warm')`` — some ancestor within 4 hops answered
+          ``q`` and the algorithm can warm-start a fixpoint from it;
+        * ``(None, None)`` — no lineage, no cached ancestor result, or
+          the algorithm registered neither hook.
+        """
+        qkey = ctx._query_key(q)
+        if qkey is None:
+            return None, None
+        parent = getattr(ctx.coo, "parent_digest", None)
+        if parent is None:
+            return None, None
+        defn = R.get(q.algorithm)
+        if defn.incremental is not None \
+                and getattr(ctx.coo, "delta", None) is not None:
+            seed = self._peek_ancestor_result(parent, qkey)
+            if seed is not None:
+                return seed, "incremental"
+        if defn.warm_start is not None:
+            digest = parent
+            for _ in range(4):
+                if digest is None:
+                    break
+                seed = self._peek_ancestor_result(digest, qkey)
+                if seed is not None:
+                    return seed, "warm"
+                anc = self._digest_ctx.get(digest)
+                digest = getattr(anc.coo, "parent_digest", None) \
+                    if anc is not None else None
+        return None, None
+
+    def _record_incremental(self, r: QueryResult, seed,
+                            ctx: GraphContext) -> None:
+        """Feed the meter after a seeded execution resolved.  The mode
+        in ``r.meta`` is what the engine *actually* ran (a declining
+        hook leaves no mode — the cold fallback is not a hit)."""
+        mode = r.meta.get("mode")
+        if mode is None:
+            return
+        saved = 0
+        prev_iters = getattr(seed, "iterations", None)
+        if prev_iters is not None and r.iterations is not None:
+            saved = max(int(prev_iters) - int(r.iterations), 0)
+        delta = getattr(ctx.coo, "delta", None) \
+            if mode == "incremental" else None
+        self._meter.record(mode, iterations_saved=saved,
+                           delta_bytes=delta.nbytes() if delta else 0)
 
     # -- result cache -------------------------------------------------------
     def _result_key(self, ctx: GraphContext, q):
@@ -643,19 +848,24 @@ class GraphAnalyticsService:
                 self._result_cache.popitem(last=False)
 
     # -- synchronous path (GraphPlatform.query) -----------------------------
-    def call(self, graph_name: str, q) -> QueryResult:
+    def call(self, graph_name: str, q, as_of=None) -> QueryResult:
         """Plan → cache → execute, synchronously.  No admission control:
-        this is the library-compatible single-query path."""
-        ctx = self.context(graph_name)
-        plan = ctx.plan(q)
+        this is the library-compatible single-query path.  ``as_of``
+        pins a time-versioned snapshot; lineage seeding (incremental
+        repair / warm start from an ancestor's cached result) applies
+        exactly as on the ``submit`` path."""
+        ctx = self.context(graph_name, as_of)
         key = self._result_key(ctx, q)
         hit = self._cache_get(key)
         if hit is not None:
             return hit
+        seed, seed_mode = self._seed_for(ctx, q)
+        plan = ctx.plan(q, seed_mode=seed_mode)
         self._account_transfer(ctx, plan)
-        r = ctx.execute(q, plan)
+        r = ctx.execute(q, plan, seed=seed)
         with self._lock:
             self.stats["executed"] += 1
+        self._record_incremental(r, seed, ctx)
         # re-key: accounting may have just materialized the pool
         # (residency-generation bump), and the entry must be findable
         # under the keys later lookups will compute
@@ -673,7 +883,7 @@ class GraphAnalyticsService:
             self._ledger.record(plan.pool, ctx.stats.bytes_coo)
 
     # -- submission ---------------------------------------------------------
-    def submit(self, graph_name: str, q) -> QueryTicket:
+    def submit(self, graph_name: str, q, as_of=None) -> QueryTicket:
         """Admit one query: plan it, classify its tier, queue it.
 
         Raises :class:`AdmissionRejected` (plan attached) when the
@@ -685,9 +895,19 @@ class GraphAnalyticsService:
         queue is at the pool's ``capacity`` *spill*: they re-place onto
         another healthy pool where the snapshot is resident (tier and
         admission estimate unchanged).
+
+        ``as_of`` resolves a time-versioned snapshot; when an ancestor
+        of that snapshot already answered ``q``, the ticket carries the
+        ancestor's result as a warm-start seed and its plan is priced
+        (and tiered) on the incremental estimate.  Seeded tickets never
+        fuse — the seed is per-snapshot state a shared batch program
+        cannot carry.
         """
-        ctx = self.context(graph_name)
-        plan = ctx.plan(q)
+        ctx = self.context(graph_name, as_of)
+        seed, seed_mode = self._seed_for(ctx, q)
+        plan = ctx.plan(q, seed_mode=seed_mode)
+        if plan.mode == "full":
+            seed = None
         est = P.plan_cost(plan)
         with self._lock:
             # an infinite estimate means the planner itself declared the
@@ -709,12 +929,14 @@ class GraphAnalyticsService:
                     raise RT.Backpressure(graph_name, q, plan.engine,
                                           tier, depth, budget)
             defn = R.get(q.algorithm)
+            fusable = defn.fusable and plan.mode == "full"
             ticket = QueryTicket(
                 self._next_ticket, graph_name, q, plan, tier, est,
                 context=ctx,
-                fuse_key=self._fuse_key(defn, q) if defn.fusable else None,
+                fuse_key=self._fuse_key(defn, q) if fusable else None,
                 queued_at=time.perf_counter(),
-                pool=plan.pool)
+                pool=plan.pool,
+                seed=seed)
             self._next_ticket += 1
             self._tickets[ticket.ticket_id] = ticket
             self._queues.setdefault((plan.pool, plan.engine, tier),
@@ -892,6 +1114,7 @@ class GraphAnalyticsService:
                 "retry": {"max_attempts": self.retry.max_attempts,
                           "retries": self.stats["retries"],
                           "dead_letters": self.stats["dead_letters"]},
+                "incremental": self._meter.snapshot(),
                 "pools": {p.name: self._pool_metrics(p)
                           for p in self.pools},
             }
@@ -1076,11 +1299,13 @@ class GraphAnalyticsService:
             return
         self._account_transfer(ctx, t.plan)
         r, err = self._run_with_retries(
-            lambda: ctx.execute(t.query, t.plan), t.ticket_id, [t])
+            lambda: ctx.execute(t.query, t.plan, seed=t.seed),
+            t.ticket_id, [t])
         if err is not None:
             self._dead_letter([t], err)
             finished.append(t)
             return
+        self._record_incremental(r, t.seed, ctx)
         with self._lock:
             self.stats["executed"] += 1
             # re-key: accounting may have materialized the pool

@@ -47,8 +47,35 @@ class Snapshot:
         return int(self.src.shape[0])
 
 
+@dataclasses.dataclass
+class SnapshotDelta:
+    """Edge edit from ``base`` to the (virtual) snapshot ``name`` — the
+    daily-cadence partition format: today's landing job ships only the
+    changed associations, not the full graph."""
+    name: str
+    base: str
+    added_src: np.ndarray
+    added_dst: np.ndarray
+    removed_src: np.ndarray
+    removed_dst: np.ndarray
+
+    @property
+    def n_added(self) -> int:
+        return int(self.added_src.shape[0])
+
+    @property
+    def n_removed(self) -> int:
+        return int(self.removed_src.shape[0])
+
+
 class SnapshotStore:
-    """Directory of npz snapshot partitions — the HDFS/GCS stand-in."""
+    """Directory of npz snapshot partitions — the HDFS/GCS stand-in.
+
+    Two partition kinds: full snapshots (``{name}.npz``) and delta
+    partitions (``{name}.delta.npz``) that reference a base by name.
+    ``manifest``/``resolve`` walk a delta chain back to its full base,
+    so a snapshot landed as deltas costs only the changed edges on disk.
+    """
 
     def __init__(self, root: str):
         self.root = root
@@ -62,12 +89,87 @@ class SnapshotStore:
         return path
 
     def read(self, name: str) -> Snapshot:
-        data = np.load(os.path.join(self.root, f"{name}.npz"))
+        path = os.path.join(self.root, f"{name}.npz")
+        if not os.path.exists(path):
+            raise KeyError(
+                f"snapshot {name!r} not in store {self.root!r}; "
+                f"available: {self.list()} (deltas: {self.list_deltas()})")
+        data = np.load(path)
         return Snapshot(name, data["src"], data["dst"])
 
+    def write_delta(self, delta: SnapshotDelta) -> str:
+        path = os.path.join(self.root, f"{delta.name}.delta.npz")
+        tmp = path + ".tmp.npz"
+        np.savez_compressed(
+            tmp, base=np.array(delta.base),
+            added_src=delta.added_src, added_dst=delta.added_dst,
+            removed_src=delta.removed_src, removed_dst=delta.removed_dst)
+        os.replace(tmp, path)
+        return path
+
+    def read_delta(self, name: str) -> SnapshotDelta:
+        path = os.path.join(self.root, f"{name}.delta.npz")
+        if not os.path.exists(path):
+            raise KeyError(
+                f"delta partition {name!r} not in store {self.root!r}; "
+                f"available deltas: {self.list_deltas()}")
+        data = np.load(path)
+        return SnapshotDelta(
+            name, str(data["base"]),
+            data["added_src"], data["added_dst"],
+            data["removed_src"], data["removed_dst"])
+
+    def manifest(self, name: str) -> dict:
+        """Lineage of ``name``: its full base partition plus the delta
+        names to apply, oldest first."""
+        deltas, seen = [], set()
+        cur = name
+        while not os.path.exists(os.path.join(self.root, f"{cur}.npz")):
+            if cur in seen:
+                raise KeyError(f"delta chain for {name!r} has a cycle "
+                               f"at {cur!r}")
+            seen.add(cur)
+            deltas.append(self.read_delta(cur))   # KeyError if missing
+            cur = deltas[-1].base
+        return {"name": name, "base": cur,
+                "deltas": [d.name for d in reversed(deltas)]}
+
+    def resolve(self, name: str) -> Snapshot:
+        """Materialize ``name`` as a full edge list: read its base and
+        apply the delta chain (removals before additions, per delta)."""
+        man = self.manifest(name)
+        base = self.read(man["base"])
+        src = np.asarray(base.src, dtype=np.int64)
+        dst = np.asarray(base.dst, dtype=np.int64)
+        for dname in man["deltas"]:
+            d = self.read_delta(dname)
+            if d.n_removed:
+                stride = np.int64(
+                    max(src.max(initial=0), dst.max(initial=0),
+                        np.asarray(d.removed_src).max(initial=0),
+                        np.asarray(d.removed_dst).max(initial=0)) + 1)
+                rem = (np.asarray(d.removed_src, dtype=np.int64) * stride
+                       + np.asarray(d.removed_dst, dtype=np.int64))
+                keep = ~np.isin(src * stride + dst, rem)
+                src, dst = src[keep], dst[keep]
+            src = np.concatenate([src, np.asarray(d.added_src,
+                                                  dtype=np.int64)])
+            dst = np.concatenate([dst, np.asarray(d.added_dst,
+                                                  dtype=np.int64)])
+        return Snapshot(name, src, dst)
+
     def list(self) -> list[str]:
+        """Full snapshot partitions only — stray ``.tmp.npz`` files from
+        a crashed ``write`` and delta partitions are excluded."""
         return sorted(f[:-4] for f in os.listdir(self.root)
-                      if f.endswith(".npz"))
+                      if f.endswith(".npz")
+                      and not f.endswith(".tmp.npz")
+                      and not f.endswith(".delta.npz"))
+
+    def list_deltas(self) -> list[str]:
+        return sorted(f[: -len(".delta.npz")] for f in os.listdir(self.root)
+                      if f.endswith(".delta.npz")
+                      and not f.endswith(".tmp.npz"))
 
 
 @dataclasses.dataclass

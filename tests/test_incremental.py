@@ -1,0 +1,400 @@
+"""Incremental snapshot deltas and warm-started fixpoints (ISSUE 9).
+
+The acceptance bar: seeded execution must be *invisible* in the answers.
+Exact algorithms (CC, BFS, SSSP, k-core) repaired from the parent's
+cached result must be byte-identical to a cold recompute of the child
+snapshot; warm-started fixpoints (PageRank, HITS) must land within
+their convergence tolerance with strictly fewer iterations.  On top of
+the parity bar, the suite pins the catalog semantics: lineage recorded
+by ``apply_delta``, delta partitions in the ``SnapshotStore``, the
+time-versioned catalog (``add_snapshot`` / ``as_of`` resolution), the
+planner's incremental-vs-full pricing, and the ``metrics()`` counters.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import planner as P
+from repro.core import pools as PL
+from repro.core.query import GraphQuery
+from repro.core.service import GraphAnalyticsService
+from repro.data import synthetic as S
+from repro.data.etl import SnapshotDelta, SnapshotStore
+
+N = 240
+
+
+def _bits(x):
+    return np.asarray(x).tobytes()
+
+
+def _edges(n, m, seed):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, n, m), rng.integers(0, n, m)], axis=1)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = S.user_follow_graph(N, 4.0, seed=11)
+    return G.build_coo(src, dst, N)
+
+
+@pytest.fixture(scope="module")
+def sym_graph():
+    src, dst = S.user_follow_graph(N, 4.0, seed=11)
+    keep = src != dst
+    return G.build_coo(src[keep], dst[keep], N, symmetrize=True)
+
+
+# ---------------------------------------------------------------------------
+# GraphCOO.apply_delta: canonicalization and lineage
+# ---------------------------------------------------------------------------
+
+def test_apply_delta_digest_matches_scratch_build(graph):
+    """The edited graph's content digest is bit-identical to building
+    the edited edge list from scratch — lineage-equal is cache-equal."""
+    added = np.array([[1, 7], [7, 1], [3, 9]])
+    removed = np.stack([np.asarray(graph.src)[:2],
+                        np.asarray(graph.dst)[:2]], axis=1)
+    child = graph.apply_delta(added=added, removed=removed)
+
+    src = np.asarray(graph.src)[: graph.n_edges].astype(np.int64)
+    dst = np.asarray(graph.dst)[: graph.n_edges].astype(np.int64)
+    w = np.asarray(graph.w)[: graph.n_edges]
+    key = src * (N + 1) + dst
+    rem_key = removed[:, 0].astype(np.int64) * (N + 1) + removed[:, 1]
+    keep = ~np.isin(key, rem_key)
+    scratch = G.build_coo(
+        np.concatenate([src[keep], added[:, 0]]),
+        np.concatenate([dst[keep], added[:, 1]]), N,
+        w=np.concatenate([w[keep], np.ones(added.shape[0], np.float32)]))
+    assert child.content_digest() == scratch.content_digest()
+    assert child.content_digest() != graph.content_digest()
+
+
+def test_apply_delta_symmetric_edits_both_directions(sym_graph):
+    child = sym_graph.apply_delta(added=[[2, 5]])
+    src = np.asarray(child.src)[: child.n_edges]
+    dst = np.asarray(child.dst)[: child.n_edges]
+    pairs = set(zip(src.tolist(), dst.tolist()))
+    assert (2, 5) in pairs and (5, 2) in pairs
+    assert child.symmetric
+
+
+def test_apply_delta_records_lineage(graph):
+    child = graph.apply_delta(added=[[0, 5]], removed=[[1, 2]])
+    assert child.parent_digest == graph.content_digest()
+    d = child.delta
+    assert d.n_added == 1 and d.n_removed == 1
+    assert d.nbytes() > 0
+    # touched: sorted unique endpoints of the edit
+    assert d.touched.tolist() == sorted({0, 5, 1, 2})
+    # the base graph itself carries no lineage
+    assert getattr(graph, "parent_digest", None) is None
+
+
+def test_apply_delta_validates(graph):
+    with pytest.raises(ValueError, match="endpoints"):
+        graph.apply_delta(added=[[0, N]])
+    with pytest.raises(ValueError, match="endpoints"):
+        graph.apply_delta(removed=[[-1, 0]])
+    with pytest.raises(ValueError, match="added_w"):
+        graph.apply_delta(added=[[0, 1], [1, 2]], added_w=[1.0])
+
+
+def test_apply_delta_add_then_remove_roundtrips_digest(graph):
+    """Removing exactly what was added returns the original digest."""
+    src = np.asarray(graph.src)[: graph.n_edges].astype(np.int64)
+    dst = np.asarray(graph.dst)[: graph.n_edges].astype(np.int64)
+    existing = set(zip(src.tolist(), dst.tolist()))
+    fresh = np.array([[u, v] for u, v in _edges(N, 40, seed=3).tolist()
+                      if (u, v) not in existing][:10])
+    assert fresh.shape[0] >= 3
+    child = graph.apply_delta(added=fresh)
+    back = child.apply_delta(removed=fresh)
+    assert back.content_digest() == graph.content_digest()
+
+
+# ---------------------------------------------------------------------------
+# SnapshotStore delta partitions
+# ---------------------------------------------------------------------------
+
+def _delta(name, base, added, removed=None):
+    removed = np.zeros((0, 2), np.int64) if removed is None else removed
+    return SnapshotDelta(name, base,
+                         added[:, 0], added[:, 1],
+                         removed[:, 0], removed[:, 1])
+
+
+def test_snapshot_store_delta_roundtrip_and_manifest(tmp_path):
+    from repro.data.etl import Snapshot
+    store = SnapshotStore(str(tmp_path))
+    base = _edges(N, 60, seed=1)
+    store.write(Snapshot("day0", base[:, 0], base[:, 1]))
+    d1, d2 = _edges(N, 8, seed=2), _edges(N, 5, seed=3)
+    store.write_delta(_delta("day1", "day0", d1))
+    store.write_delta(_delta("day2", "day1", d2, removed=d1[:3]))
+
+    rt = store.read_delta("day2")
+    assert rt.base == "day1" and rt.n_added == 5 and rt.n_removed == 3
+    man = store.manifest("day2")
+    assert man == {"name": "day2", "base": "day0",
+                   "deltas": ["day1", "day2"]}
+
+    # resolve == manual replay (removals before additions, per delta)
+    snap = store.resolve("day2")
+    expect = np.concatenate([base, d1], axis=0)
+    key = expect[:, 0] * (N + 1) + expect[:, 1]
+    rem = d1[:3, 0] * (N + 1) + d1[:3, 1]
+    expect = np.concatenate([expect[~np.isin(key, rem)], d2], axis=0)
+    got = np.stack([snap.src, snap.dst], axis=1)
+    assert np.array_equal(np.sort(got, axis=0), np.sort(expect, axis=0))
+
+    assert store.list() == ["day0"]
+    assert store.list_deltas() == ["day1", "day2"]
+
+
+def test_snapshot_store_delta_errors(tmp_path):
+    from repro.data.etl import Snapshot
+    store = SnapshotStore(str(tmp_path))
+    with pytest.raises(KeyError, match="available deltas"):
+        store.read_delta("nope")
+    # a dangling chain surfaces the missing partition by name
+    store.write_delta(_delta("day1", "day0", _edges(N, 4, seed=4)))
+    with pytest.raises(KeyError, match="day0"):
+        store.manifest("day1")
+    # a cyclic chain is reported, not walked forever
+    store.write(Snapshot("dayA", *_edges(N, 4, seed=5).T))
+    store.write_delta(_delta("c1", "c2", _edges(N, 2, seed=6)))
+    store.write_delta(_delta("c2", "c1", _edges(N, 2, seed=7)))
+    with pytest.raises(KeyError, match="cycle"):
+        store.manifest("c1")
+
+
+# ---------------------------------------------------------------------------
+# Time-versioned catalog
+# ---------------------------------------------------------------------------
+
+def _versioned_service(coo, added, **kw):
+    svc = GraphAnalyticsService()
+    svc.add_snapshot("g", coo, as_of="2026-08-01", **kw)
+    svc.add_snapshot("g", as_of="2026-08-02", added=added, **kw)
+    return svc
+
+
+def test_add_snapshot_versioning_rules(graph):
+    svc = GraphAnalyticsService()
+    with pytest.raises(ValueError, match="either a graph or a delta"):
+        svc.add_snapshot("g")
+    with pytest.raises(KeyError, match="no base version"):
+        svc.add_snapshot("g", added=[[0, 1]])
+    svc.add_snapshot("g", graph, as_of=3)
+    with pytest.raises(ValueError, match="not both"):
+        svc.add_snapshot("g", graph, added=[[0, 1]])
+    with pytest.raises(ValueError, match="must advance"):
+        svc.add_snapshot("g", graph, as_of=3)
+    ctx = svc.add_snapshot("g", added=[[0, 1]])   # as_of defaults to 4
+    assert svc.snapshot_versions("g") == [3, 4]
+    assert svc.context("g") is ctx                # bare name = latest
+
+
+def test_context_as_of_resolution(graph):
+    svc = _versioned_service(graph, added=[[0, 1]])
+    old = svc.context("g", as_of="2026-08-01")
+    mid = svc.context("g", as_of="2026-08-01T23:59")   # newest <= as_of
+    new = svc.context("g", as_of="2026-09-01")
+    assert old is mid and old is not new
+    assert new is svc.context("g")
+    with pytest.raises(KeyError, match="no version"):
+        svc.context("g", as_of="2025-01-01")
+    svc.add_graph("plain", graph)
+    with pytest.raises(KeyError, match="no time-versioned"):
+        svc.context("plain", as_of="2026-08-01")
+
+
+# ---------------------------------------------------------------------------
+# Parity: seeded execution is invisible in the answers
+# ---------------------------------------------------------------------------
+
+EXACT_QUERIES = [
+    ("connected_components", GraphQuery.of("connected_components")),
+    ("bfs", GraphQuery.of("bfs", sources=(0,))),
+    ("sssp", GraphQuery.of("sssp", source=0)),
+]
+
+
+@pytest.mark.parametrize("alg,q", EXACT_QUERIES,
+                         ids=[a for a, _ in EXACT_QUERIES])
+@pytest.mark.parametrize("force_engine", ["local", "distributed"])
+def test_incremental_exact_parity(sym_graph, alg, q, force_engine):
+    """Seeded repair == cold recompute, byte for byte, on both engines,
+    with fewer (or equal) iterations and the mode recorded."""
+    added = _edges(N, 6, seed=21)
+    svc = _versioned_service(sym_graph, added,
+                             force_engine=force_engine)
+    parent = svc.call("g", q, as_of="2026-08-01")
+    r = svc.call("g", q)
+    assert r.meta.get("mode") == "incremental"
+    assert r.iterations <= parent.iterations
+
+    ctx = svc.context("g")
+    cold = ctx.engine(r.meta["plan"].engine).run(
+        q.algorithm, q.params, variant=r.meta["plan"].variant)
+    assert _bits(r.value) == _bits(cold.value)
+
+
+def test_incremental_kcore_parity_on_removal(sym_graph):
+    """k-core repairs removal-only deltas (the core only shrinks)."""
+    q = GraphQuery.of("k_core", k=2)
+    src = np.asarray(sym_graph.src)[: sym_graph.n_edges]
+    dst = np.asarray(sym_graph.dst)[: sym_graph.n_edges]
+    sel = src < dst
+    removed = np.stack([src[sel][:5], dst[sel][:5]], axis=1)
+    svc = GraphAnalyticsService()
+    svc.add_snapshot("g", sym_graph, as_of=0)
+    svc.call("g", q)
+    svc.add_snapshot("g", as_of=1, removed=removed)
+    r = svc.call("g", q)
+    assert r.meta.get("mode") == "incremental"
+    ctx = svc.context("g")
+    cold = ctx.engine(r.meta["plan"].engine).run(
+        q.algorithm, q.params, variant=r.meta["plan"].variant)
+    assert _bits(r.value) == _bits(cold.value)
+
+
+def test_incremental_declines_to_cold_without_parent_result(sym_graph):
+    """No cached parent answer -> no seed -> plain full execution."""
+    svc = _versioned_service(sym_graph, added=[[0, 9]])
+    r = svc.call("g", GraphQuery.of("connected_components"))
+    assert r.meta.get("mode") is None
+    assert svc.metrics()["incremental"]["incremental_runs"] == 0
+
+
+@pytest.mark.parametrize("alg,q,unpack", [
+    ("pagerank", GraphQuery.of("pagerank"), lambda v: [("ranks", v)]),
+    ("hits", GraphQuery.of("hits"),
+     lambda v: [("hubs", v["hubs"]), ("authorities", v["authorities"])]),
+], ids=["pagerank", "hits"])
+def test_warm_start_parity_and_fewer_iterations(graph, alg, q, unpack):
+    # one-edge delta: the child fixpoint sits close to the parent's, so
+    # the warm start must beat the cold run decisively, not marginally
+    added = _edges(N, 1, seed=33)
+    svc = _versioned_service(graph, added)
+    svc.call("g", q, as_of="2026-08-01")
+    r = svc.call("g", q)
+    assert r.meta.get("mode") == "warm"
+
+    ctx = svc.context("g")
+    cold = ctx.engine(r.meta["plan"].engine).run(
+        q.algorithm, q.params, variant=r.meta["plan"].variant)
+    assert r.iterations < cold.iterations
+    for name, warm_v in unpack(r.value):
+        cold_v = dict(unpack(cold.value))[name]
+        assert np.allclose(np.asarray(warm_v), np.asarray(cold_v),
+                           atol=1e-4), name
+
+
+def test_warm_start_walks_past_unanswered_versions(graph):
+    """The warm seed may come from a grandparent: versions the query
+    never ran on are walked through, not a dead end."""
+    svc = GraphAnalyticsService()
+    svc.add_snapshot("g", graph, as_of=0)
+    q = GraphQuery.of("pagerank")
+    svc.call("g", q)
+    svc.add_snapshot("g", as_of=1, added=[[0, 3]])     # never queried
+    svc.add_snapshot("g", as_of=2, added=[[1, 4]])
+    r = svc.call("g", q)
+    assert r.meta.get("mode") == "warm"
+
+
+# ---------------------------------------------------------------------------
+# Planner pricing, submit path, pools, metrics
+# ---------------------------------------------------------------------------
+
+def test_plan_mode_crossover_small_vs_huge_delta(sym_graph):
+    q = GraphQuery.of("connected_components")
+    svc = GraphAnalyticsService()
+    svc.add_snapshot("g", sym_graph, as_of=0)
+    svc.call("g", q)
+    svc.add_snapshot("g", as_of=1, added=[[0, 7]])
+    _, mode = svc._seed_for(svc.context("g"), q)
+    assert mode == "incremental"
+    plan = svc.context("g").plan(q, seed_mode=mode)
+    assert plan.mode == "incremental"
+    assert plan.est_s < P.plan_cost(svc.context("g").plan(q))
+    assert "incremental repair" in plan.reason
+
+    # a delta touching every vertex prices out: full recompute wins
+    svc.add_snapshot("g", as_of=2,
+                     added=np.stack([np.arange(N), np.roll(np.arange(N), 1)],
+                                    axis=1))
+    svc.call("g", q, as_of=1)          # parent answer for the seed
+    _, mode = svc._seed_for(svc.context("g"), q)
+    assert mode == "incremental"
+    big = svc.context("g").plan(q, seed_mode=mode)
+    assert big.mode == "full"
+    assert "full recompute beats incremental" in big.reason
+
+
+def test_price_incremental_estimate_monotone_in_touched(graph):
+    stats = P.GraphStats.of(graph)
+    q = P.QuerySpec("connected_components", graph.n_vertices,
+                    iterations=8, state_bytes_per_vertex=4.0)
+    deltas = [G.GraphDelta(added=np.zeros((0, 2), np.int64),
+                           removed=np.zeros((0, 2), np.int64),
+                           touched=np.arange(k, dtype=np.int32))
+              for k in (2, 20, 200)]
+    costs = [P.estimate_incremental_cost(stats, q, d) for d in deltas]
+    assert costs == sorted(costs)
+    assert costs[0] < P.full_traffic_cost(stats, q)
+
+
+def test_submitted_seeded_ticket_never_fuses(sym_graph):
+    q = GraphQuery.of("bfs", sources=(0,))
+    svc = _versioned_service(sym_graph, added=[[0, 9]])
+    parent = svc.call("g", q, as_of="2026-08-01")
+    t = svc.submit("g", q)
+    assert t.plan.mode == "incremental"
+    assert t.fuse_key is None and t.seed is not None
+    r = svc.result(t)
+    assert r.meta.get("mode") == "incremental"
+    cold = svc.context("g").engine(t.plan.engine).run(
+        q.algorithm, q.params, variant=t.plan.variant)
+    assert _bits(r.value) == _bits(cold.value)
+    assert r.iterations <= parent.iterations
+
+
+def test_incremental_parity_under_two_pools(sym_graph):
+    ps = PL.PoolSet([PL.DevicePool("onprem"), PL.DevicePool("cloud")])
+    q = GraphQuery.of("connected_components")
+    svc = GraphAnalyticsService(pools=ps)
+    svc.add_snapshot("g", sym_graph, as_of=0, pools=["cloud"])
+    svc.call("g", q)
+    svc.add_snapshot("g", as_of=1, added=[[0, 9]], pools=["cloud"])
+    r = svc.call("g", q)
+    assert r.meta.get("mode") == "incremental"
+    ctx = svc.context("g")
+    cold = ctx.engine(r.meta["plan"].engine).run(
+        q.algorithm, q.params, variant=r.meta["plan"].variant)
+    assert _bits(r.value) == _bits(cold.value)
+
+
+def test_metrics_incremental_counters(graph, sym_graph):
+    svc = GraphAnalyticsService()
+    base = svc.metrics()["incremental"]
+    assert base == {"warm_hits": 0, "incremental_runs": 0,
+                    "iterations_saved": 0, "delta_bytes_applied": 0}
+
+    svc.add_snapshot("cc", sym_graph, as_of=0)
+    svc.add_snapshot("pr", graph, as_of=0)
+    qc, qp = GraphQuery.of("connected_components"), GraphQuery.of("pagerank")
+    svc.call("cc", qc)
+    svc.call("pr", qp)
+    svc.add_snapshot("cc", as_of=1, added=[[0, 9]])
+    svc.add_snapshot("pr", as_of=1, added=[[0, 9]])
+    svc.call("cc", qc)
+    svc.call("pr", qp)
+    m = svc.metrics()["incremental"]
+    assert m["incremental_runs"] == 1 and m["warm_hits"] == 1
+    assert m["iterations_saved"] > 0
+    assert m["delta_bytes_applied"] > 0

@@ -1,0 +1,164 @@
+"""Property suite for ``GraphCOO.apply_delta``'s canonicalization.
+
+The load-bearing invariant of the whole incremental stack is that
+*lineage-equal graphs are cache-equal*: a graph reached through any
+sequence of deltas has the same ``content_digest`` as the same edge
+set built from scratch.  Everything else (seed lookup by parent
+digest, result-cache keys, the planner's incremental pricing) leans on
+that identity, so this module pins it as algebra:
+
+* delta *composition*: applying a delta edge-by-edge, in any split,
+  equals applying it as one batch;
+* add/remove *inversion*: removing exactly what a delta added returns
+  the original digest;
+* scratch *equivalence*: the digest equals ``build_coo`` over the
+  edited edge list.
+
+The core cases run unconditionally over seeded random instances (the
+suite must hold the line on boxes without hypothesis); when hypothesis
+is installed the same properties run again under generated edge lists.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional test dep: seeded fallbacks only
+    HAVE_HYPOTHESIS = False
+
+V = 60
+
+
+def _graph(rng, n_edges=120, symmetrize=False):
+    src = rng.integers(0, V, n_edges)
+    dst = rng.integers(0, V, n_edges)
+    return G.build_coo(src, dst, V, symmetrize=symmetrize)
+
+
+def _pairs(rng, n):
+    return np.stack([rng.integers(0, V, n), rng.integers(0, V, n)], axis=1)
+
+
+def _present_pairs(coo):
+    src = np.asarray(coo.src)[: coo.n_edges]
+    dst = np.asarray(coo.dst)[: coo.n_edges]
+    return set(zip(src.tolist(), dst.tolist()))
+
+
+def _check_batch_equals_split(coo, added):
+    """One batch == any two-way split of the same added edges."""
+    batch = coo.apply_delta(added=added)
+    for cut in {1, len(added) // 2, len(added) - 1}:
+        split = coo.apply_delta(added=added[:cut]) \
+                   .apply_delta(added=added[cut:])
+        assert split.content_digest() == batch.content_digest()
+
+
+def _check_add_remove_roundtrip(coo, pairs):
+    """Adding fresh edges then removing them restores the digest."""
+    fresh = np.array([p for p in map(tuple, pairs.tolist())
+                      if p not in _present_pairs(coo)
+                      and (not coo.symmetric
+                           or p[::-1] not in _present_pairs(coo))])
+    if fresh.shape[0] == 0:
+        return
+    child = coo.apply_delta(added=fresh)
+    back = child.apply_delta(removed=fresh)
+    assert back.content_digest() == coo.content_digest()
+    assert child.content_digest() != coo.content_digest()
+
+
+def _check_scratch_equivalence(coo, added, removed):
+    """apply_delta == build_coo over the hand-edited edge list."""
+    child = coo.apply_delta(added=added, removed=removed)
+    src = np.asarray(coo.src)[: coo.n_edges].astype(np.int64)
+    dst = np.asarray(coo.dst)[: coo.n_edges].astype(np.int64)
+    w = np.asarray(coo.w)[: coo.n_edges]
+    add_s, add_d = added[:, 0], added[:, 1]
+    rem_s, rem_d = removed[:, 0], removed[:, 1]
+    if coo.symmetric:
+        add_s, add_d = (np.concatenate([add_s, add_d]),
+                        np.concatenate([add_d, add_s]))
+        rem_s, rem_d = (np.concatenate([rem_s, rem_d]),
+                        np.concatenate([rem_d, rem_s]))
+    stride = np.int64(V + 1)
+    keep = ~np.isin(src * stride + dst, rem_s * stride + rem_d)
+    scratch = G.build_coo(
+        np.concatenate([src[keep], add_s]),
+        np.concatenate([dst[keep], add_d]), V,
+        w=np.concatenate([w[keep],
+                          np.ones(add_s.shape[0], np.float32)]))
+    scratch.symmetric = coo.symmetric
+    assert child.content_digest() == scratch.content_digest()
+
+
+# ---------------------------------------------------------------------------
+# Seeded deterministic instances — always run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("symmetric", [False, True],
+                         ids=["directed", "symmetric"])
+def test_delta_composition_seeded(seed, symmetric):
+    rng = np.random.default_rng(seed)
+    _check_batch_equals_split(_graph(rng, symmetrize=symmetric),
+                              _pairs(rng, 12))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("symmetric", [False, True],
+                         ids=["directed", "symmetric"])
+def test_add_remove_roundtrip_seeded(seed, symmetric):
+    rng = np.random.default_rng(100 + seed)
+    _check_add_remove_roundtrip(_graph(rng, symmetrize=symmetric),
+                                _pairs(rng, 20))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("symmetric", [False, True],
+                         ids=["directed", "symmetric"])
+def test_scratch_equivalence_seeded(seed, symmetric):
+    rng = np.random.default_rng(200 + seed)
+    coo = _graph(rng, symmetrize=symmetric)
+    src = np.asarray(coo.src)[: coo.n_edges]
+    dst = np.asarray(coo.dst)[: coo.n_edges]
+    removed = np.stack([src[:4], dst[:4]], axis=1).astype(np.int64)
+    _check_scratch_equivalence(coo, _pairs(rng, 10), removed)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variants — same properties, generated instances
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    edge_lists = st.lists(
+        st.tuples(st.integers(0, V - 1), st.integers(0, V - 1)),
+        min_size=2, max_size=24).map(lambda e: np.asarray(e, np.int64))
+
+    @given(base=edge_lists, added=edge_lists,
+           symmetric=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_delta_composition_generated(base, added, symmetric):
+        coo = G.build_coo(base[:, 0], base[:, 1], V,
+                          symmetrize=symmetric)
+        _check_batch_equals_split(coo, added)
+
+    @given(base=edge_lists, pairs=edge_lists,
+           symmetric=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_add_remove_roundtrip_generated(base, pairs, symmetric):
+        coo = G.build_coo(base[:, 0], base[:, 1], V,
+                          symmetrize=symmetric)
+        _check_add_remove_roundtrip(coo, pairs)
+
+    @given(base=edge_lists, added=edge_lists,
+           symmetric=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_scratch_equivalence_generated(base, added, symmetric):
+        coo = G.build_coo(base[:, 0], base[:, 1], V,
+                          symmetrize=symmetric)
+        removed = base[: len(base) // 2]
+        _check_scratch_equivalence(coo, added, removed)

@@ -478,3 +478,59 @@ def test_federation_spill_stress_digest(graph, graph2):
     if out:                                  # CI nondeterminism probe
         with open(out, "a") as f:
             f.write(f"federation_digest {digest}\n")
+
+
+def test_incremental_lineage_stress_digest(graph):
+    """Lineage determinism bar, folded into the digest diff: a
+    two-version snapshot chain whose second version is served by seeded
+    executions (incremental CC/BFS repairs, warm PageRank/HITS
+    restarts) drains to byte-identical per-ticket results serial vs
+    ``workers=4``, and the combined digest lands in
+    ``RUNTIME_DIGEST_OUT`` for CI's PYTHONHASHSEED diff."""
+    import repro.core.algorithms.connected_components  # noqa: F401
+    import repro.core.algorithms.hits                  # noqa: F401
+    import repro.core.algorithms.pagerank              # noqa: F401
+    import repro.core.algorithms.traversal             # noqa: F401
+
+    sym = G.build_coo(np.asarray(graph.src)[: graph.n_edges],
+                      np.asarray(graph.dst)[: graph.n_edges],
+                      graph.n_vertices, symmetrize=True)
+    rng = np.random.default_rng(17)
+    added = np.stack([rng.integers(0, N, 5), rng.integers(0, N, 5)],
+                     axis=1)
+    queries = [GraphQuery.of("connected_components"),
+               GraphQuery.of("bfs", sources=(0,)),
+               GraphQuery.of("pagerank"),
+               GraphQuery.of("hits")]
+
+    def run(workers):
+        svc = GraphAnalyticsService(cache_size=64)
+        svc.add_snapshot("g", sym, as_of=0)
+        for q in queries:                    # parent answers = the seeds
+            svc.call("g", q, as_of=0)
+        svc.add_snapshot("g", as_of=1, added=added)
+        tickets = [svc.submit("g", q) for q in queries for _ in range(2)]
+        seeded = sum(t.plan.mode != "full" for t in tickets)
+        svc.drain(workers=workers)
+        per = {}
+        for t in tickets:
+            assert t.status == "done", (t.status, t.error)
+            per[t.ticket_id] = _bits(svc.result(t).value)
+        return per, seeded, svc.metrics()["incremental"]
+
+    serial, seeded_s, meter_s = run(1)
+    conc, seeded_c, meter_c = run(4)
+    assert seeded_s == seeded_c == len(serial)   # every ticket seeded
+    # duplicates resolve from the result cache: one seeded execution
+    # per distinct query, counted identically serial vs concurrent
+    assert meter_s == meter_c
+    assert meter_s["incremental_runs"] == 2 and meter_s["warm_hits"] == 2
+    assert serial == conc                    # byte-identical, per ticket
+
+    digest = hashlib.blake2b(
+        b"|".join(serial[k] for k in sorted(serial)),
+        digest_size=16).hexdigest()
+    out = os.environ.get("RUNTIME_DIGEST_OUT")
+    if out:                                  # CI nondeterminism probe
+        with open(out, "a") as f:
+            f.write(f"incremental_digest {digest}\n")
