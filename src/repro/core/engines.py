@@ -100,6 +100,12 @@ class Engine:
         # writes to the per-algorithm memo.  RLock: runners re-enter the
         # lazy properties from inside run()/run_batch().
         self._exec_lock = threading.RLock()
+        # Superstep profile sink: ``run(profile=True)`` installs a list
+        # here (under _exec_lock) and ``run_superstep`` appends one
+        # counter dict per pregel execution it performs.  ``None`` (the
+        # default) means profiling is off and the hot path pays a single
+        # attribute read.
+        self._profile_sink: Optional[list] = None
         # Measurements are read by the *planner* path (submit-time
         # current_stats) while a worker may hold _exec_lock for a long
         # batch run — a separate lock keeps submit latency flat.
@@ -243,6 +249,13 @@ class Engine:
         The dense and fused paths recompute every vertex each round
         regardless, so the seed only narrows work where narrowing is
         exact; every variant still lands on the same fixpoint.
+
+        With a profile sink installed (``run(profile=True)``), each
+        execution appends a superstep counter dict — realized variant,
+        iterations, halt step, message traffic, per-round frontier
+        occupancy — computed from values the run produced anyway (plus,
+        for frontier, the opt-in occupancy output).  Results are
+        identical either way.
         """
         v = variant or "dense"
         if v == "auto":
@@ -252,19 +265,72 @@ class Engine:
                 v = "fused"
             else:
                 v = "dense"
+        sink = self._profile_sink
         if v == "fused" and self.superstep_supported(spec, "fused"):
             V = self.coo.n_vertices
-            return run_pregel_fused(
+            state, iters = run_pregel_fused(
                 spec, self.superstep_ell("in"), init_state[:V], max_iters,
                 use_pallas=getattr(self, "use_pallas", False))
+            if sink is not None:
+                sink.append(self._superstep_profile(
+                    "fused", spec, init_state, iters, max_iters,
+                    slots_per_iter=int(self.superstep_ell("in").nbr.size)))
+            return state, iters
         if v == "frontier" and self.superstep_supported(spec, "frontier"):
             V = self.coo.n_vertices
-            return run_pregel_frontier(
-                spec, self.superstep_ell("out"), init_state[:V], max_iters,
-                init_active=(None if init_active is None
-                             else init_active[:V]))
-        return run_pregel(spec, self.sharded, init_state, max_iters,
-                          mesh=self.mesh)
+            active = None if init_active is None else init_active[:V]
+            if sink is None:
+                return run_pregel_frontier(
+                    spec, self.superstep_ell("out"), init_state[:V],
+                    max_iters, init_active=active)
+            ell = self.superstep_ell("out")
+            state, iters, occ = run_pregel_frontier(
+                spec, ell, init_state[:V], max_iters,
+                init_active=active, profile=True)
+            n = int(iters)
+            occupancy = [int(c) for c in np.asarray(occ)[:n]]
+            B = min(1024, max(V, 1))             # run_pregel_frontier's B
+            K = int(ell.nbr.shape[1])
+            slots = sum(-(-c // B) * B * K for c in occupancy)
+            prof = self._superstep_profile(
+                "frontier", spec, init_state, iters, max_iters,
+                slots_total=slots)
+            prof["frontier_occupancy"] = occupancy
+            prof["block_rows"] = B
+            sink.append(prof)
+            return state, iters
+        state, iters = run_pregel(spec, self.sharded, init_state,
+                                  max_iters, mesh=self.mesh)
+        if sink is not None:
+            sink.append(self._superstep_profile(
+                "dense", spec, init_state, iters, max_iters,
+                slots_per_iter=int(self.coo.n_edges)))
+        return state, iters
+
+    def _superstep_profile(self, variant: str, spec: PregelSpec,
+                           init_state, iters, max_iters: int,
+                           slots_per_iter: Optional[int] = None,
+                           slots_total: Optional[int] = None) -> dict:
+        """One execution's superstep counters.  Message traffic is
+        counted in *slots* (gather/scatter positions the variant
+        scans per run: E per dense round, the full ELL per fused
+        round, the active blocks per frontier round) times the message
+        element size."""
+        n = int(iters)
+        if slots_total is None:
+            slots_total = int(slots_per_iter or 0) * n
+        itemsize = (np.dtype(spec.message_dtype).itemsize
+                    if spec.message_dtype is not None
+                    else np.dtype(init_state.dtype).itemsize)
+        return {
+            "variant": variant,
+            "iterations": n,
+            "max_iters": int(max_iters),
+            "halted": n < int(max_iters),
+            "halt_step": n,
+            "message_slots": int(slots_total),
+            "message_bytes": int(slots_total) * int(itemsize),
+        }
 
     # -- device pools -------------------------------------------------------
     def for_pool(self, pool) -> "Engine":
@@ -325,7 +391,7 @@ class Engine:
     def run(self, algorithm, params: Optional[dict] = None,
             count_only: bool = False,
             variant: Optional[str] = None,
-            seed=None, delta=None) -> QueryResult:
+            seed=None, delta=None, profile: bool = False) -> QueryResult:
         """Execute any registered algorithm on this engine's graph.
 
         ``variant`` selects one of the definition's registered execution
@@ -345,6 +411,12 @@ class Engine:
         ``None``) — execution falls back to the cold runner, so seeds
         affect time, never correctness.  ``meta['mode']`` records the
         realized path ('incremental' | 'warm').
+
+        ``profile=True`` collects superstep counters from any pregel
+        loop the execution runs and attaches the last (outermost)
+        one as ``meta['superstep']``.  Off (the default), no counter
+        code runs at all — the traced and untraced result values are
+        byte-identical either way.
         """
         defn = R.get(algorithm) if isinstance(algorithm, str) else algorithm
         if self.name not in defn.engines:
@@ -357,40 +429,55 @@ class Engine:
         if variant is None and defn.variants:
             variant = self._select_variant(defn, p, count_only)
         mode = None
+        count_fast = False
+        sink = None
         with self._exec_lock, self._device_scope():
             self.n_runs += 1
-            # the fault-injection seam: per attempt, so the service's
-            # retry loop re-triggers an installed policy on every try
-            R.apply_fault(defn.name)
-            if count_only and defn.count_run is not None:
-                value, iters = self._invoke(defn.count_run, defn, p)
-                return QueryResult(value, self.name, iters)
-            got = None
-            if seed is not None and delta is not None \
-                    and defn.incremental is not None:
-                got = defn.incremental(self, p, seed, delta)
-                if got is not None:
-                    mode = "incremental"
-            if got is None and seed is not None \
-                    and defn.warm_start is not None:
-                got = defn.warm_start(self, p, seed)
-                if got is not None:
-                    mode = "warm"
-            if got is not None:
-                value, iters = got
-                iters = int(iters) if iters is not None else None
-            else:
-                value, iters = self._invoke(defn.runner_for(variant),
-                                            defn, p)
-        if count_only and defn.count is not None:
-            value = defn.count(value)
-        meta = {"variant": variant} if variant is not None else {}
-        if mode is not None:
-            meta["mode"] = mode
+            if profile:
+                self._profile_sink = []
+            try:
+                # the fault-injection seam: per attempt, so the service's
+                # retry loop re-triggers an installed policy on every try
+                R.apply_fault(defn.name)
+                count_fast = count_only and defn.count_run is not None
+                if count_fast:
+                    value, iters = self._invoke(defn.count_run, defn, p)
+                else:
+                    got = None
+                    if seed is not None and delta is not None \
+                            and defn.incremental is not None:
+                        got = defn.incremental(self, p, seed, delta)
+                        if got is not None:
+                            mode = "incremental"
+                    if got is None and seed is not None \
+                            and defn.warm_start is not None:
+                        got = defn.warm_start(self, p, seed)
+                        if got is not None:
+                            mode = "warm"
+                    if got is not None:
+                        value, iters = got
+                        iters = int(iters) if iters is not None else None
+                    else:
+                        value, iters = self._invoke(
+                            defn.runner_for(variant), defn, p)
+            finally:
+                if profile:
+                    sink, self._profile_sink = self._profile_sink, None
+        if not count_fast:
+            if count_only and defn.count is not None:
+                value = defn.count(value)
+        meta = {}
+        if not count_fast:
+            if variant is not None:
+                meta["variant"] = variant
+            if mode is not None:
+                meta["mode"] = mode
+        if sink:
+            meta["superstep"] = sink[-1]
         return QueryResult(value, self.name, iters, meta)
 
     def run_batch(self, algorithm, params_list,
-                  count_only=None) -> list:
+                  count_only=None, profile: bool = False) -> list:
         """Execute K compatible queries of one algorithm as a single
         fused program (the service's batch-packing path, NScale-style).
 
@@ -415,10 +502,17 @@ class Engine:
         ps = [defn.validate(p) for p in params_list]
         if defn.requires_symmetric:
             G.require_symmetric(self.coo, defn.name)
+        sink = None
         with self._exec_lock, self._device_scope():
             self.n_runs += 1
-            R.apply_fault(defn.name)     # one fused execution, one fault
-            values, iters, fused_meta = defn.batch_runner(self, ps)
+            if profile:
+                self._profile_sink = []
+            try:
+                R.apply_fault(defn.name)  # one fused execution, one fault
+                values, iters, fused_meta = defn.batch_runner(self, ps)
+            finally:
+                if profile:
+                    sink, self._profile_sink = self._profile_sink, None
         if len(values) != len(ps):
             raise ValueError(
                 f"{defn.name}: batch runner returned {len(values)} values "
@@ -430,6 +524,11 @@ class Engine:
                 value = defn.count(value)
             meta = {"fused": {"batch_size": len(ps), "index": i,
                               **(fused_meta or {})}}
+            if sink:
+                # one fused execution -> the same shared counters on
+                # every member's result (stripped, like 'fused', from
+                # cached re-serves)
+                meta["superstep"] = sink[-1]
             out.append(QueryResult(value, self.name, iters, meta))
         return out
 
@@ -460,6 +559,10 @@ class Engine:
             state, max_iters = defn.init(self, params)
             state, iters = run_pregel(runner, self.sharded, state,
                                       max_iters, mesh=self.mesh)
+            if self._profile_sink is not None:
+                self._profile_sink.append(self._superstep_profile(
+                    "dense", runner, state, iters, max_iters,
+                    slots_per_iter=int(self.coo.n_edges)))
             return state[: self.coo.n_vertices], int(iters)
         value, iters = runner(self, **params)
         return value, (int(iters) if iters is not None else None)

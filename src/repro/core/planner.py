@@ -276,6 +276,53 @@ def superstep_specs(algorithm: str, *, output_rows: int, iterations: int,
         for v in names)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One row of the planner's candidate table — a
+    (pool, engine, variant, mode) combination with its cost terms.
+
+    ``choose_plan`` records every combination it costed (not just the
+    winner) on ``Plan.candidates``, so ``service.explain()`` can show
+    the losing placements and why they lost.  ``feasible=False`` rows
+    were never in the running (infinite cost, unhealthy pool, engine
+    excluded by a capability clamp) and carry the ``note``; exactly one
+    row has ``chosen=True``.
+    """
+
+    engine: str
+    variant: Optional[str] = None
+    pool: Optional[str] = None
+    mode: str = "full"
+    est_s: float = float("inf")
+    compute_s: float = float("inf")
+    transfer_s: float = 0.0
+    feasible: bool = True
+    chosen: bool = False
+    note: str = ""
+
+
+def mark_chosen(candidates, engine, variant=None, pool=None,
+                mode="full", note="") -> tuple:
+    """Re-mark the candidate table after the winner changed outside
+    ``choose_plan`` (the service's ``force_engine`` / capability-clamp
+    re-plan, ``price_incremental`` mode flips).  Exactly the matching
+    (engine, variant, pool, mode) row becomes chosen; if no row matches
+    (the override picked a combination the table never costed) a
+    synthetic chosen row is appended with ``note``."""
+    out, hit = [], False
+    for c in candidates:
+        chosen = (not hit and c.engine == engine and c.variant == variant
+                  and c.pool == pool and c.mode == mode)
+        hit = hit or chosen
+        if c.chosen != chosen:
+            c = dataclasses.replace(c, chosen=chosen)
+        out.append(c)
+    if not hit:
+        out.append(PlanCandidate(engine, variant, pool, mode,
+                                 chosen=True, note=note))
+    return tuple(out)
+
+
 @dataclasses.dataclass
 class Plan:
     engine: str                   # 'local' | 'distributed'
@@ -303,6 +350,11 @@ class Plan:
     # iteration budget) falls back to the cold run, so the mode affects
     # cost estimates and tiering, never correctness.
     mode: str = "full"
+    # -- observability ------------------------------------------------------
+    # The full candidate table the planner costed (PlanCandidate rows,
+    # the winner marked chosen) — what ``service.explain()`` renders.
+    # Empty on hand-built plans; never consulted by execution.
+    candidates: tuple = ()
 
 
 def estimate_local_cost(g: GraphStats, q: QuerySpec,
@@ -418,19 +470,35 @@ def price_incremental(plan: Plan, g: GraphStats, q: QuerySpec,
     untouched."""
     if seed_mode is None:
         return plan
+
+    def with_mode_row(mode: str, est: float, chosen: bool,
+                      note: str = "") -> tuple:
+        row = PlanCandidate(plan.engine, plan.variant, plan.pool, mode,
+                            est_s=est, compute_s=est - plan.transfer_s,
+                            transfer_s=plan.transfer_s, note=note)
+        table = plan.candidates + (row,)
+        if chosen:
+            return mark_chosen(table, plan.engine, plan.variant,
+                               plan.pool, mode)
+        return table
+
     full = plan_cost(plan)
     if seed_mode == "incremental" and delta is not None:
         cold_traffic = full_traffic_cost(g, q, profile)
         inc_traffic = estimate_incremental_cost(g, q, delta, profile)
+        est = max(full - cold_traffic + inc_traffic, 0.0)
         if inc_traffic < cold_traffic:
-            est = max(full - cold_traffic + inc_traffic, 0.0)
             return dataclasses.replace(
                 plan, mode="incremental", est_s=est,
+                candidates=with_mode_row("incremental", est, True),
                 reason=f"incremental repair ({delta.n_touched} touched, "
                        f"{est*1e3:.2f} ms vs full {full*1e3:.2f} ms); "
                        f"{plan.reason}")
         return dataclasses.replace(
             plan,
+            candidates=with_mode_row(
+                "incremental", est, False,
+                note="repair traffic loses to full recompute"),
             reason=f"full recompute beats incremental (traffic "
                    f"{cold_traffic*1e3:.3f} ms vs {inc_traffic*1e3:.3f} "
                    f"ms); {plan.reason}")
@@ -438,10 +506,25 @@ def price_incremental(plan: Plan, g: GraphStats, q: QuerySpec,
         warm = full * WARM_ITER_FRACTION
         return dataclasses.replace(
             plan, mode="warm", est_s=warm,
+            candidates=with_mode_row("warm", warm, True),
             reason=f"warm start from ancestor result "
                    f"(~{warm*1e3:.2f} ms vs cold {full*1e3:.2f} ms); "
                    f"{plan.reason}")
     return plan
+
+
+def _engine_candidates(q: QuerySpec, tl: float, td: float,
+                       winner: str) -> tuple:
+    """The legacy path's two candidate rows for one spec."""
+    return (
+        PlanCandidate("local", q.variant, est_s=tl, compute_s=tl,
+                      feasible=tl != float("inf"),
+                      chosen=winner == "local",
+                      note="" if tl != float("inf")
+                      else "exceeds local memory budget"),
+        PlanCandidate("distributed", q.variant, est_s=td, compute_s=td,
+                      chosen=winner == "distributed"),
+    )
 
 
 def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
@@ -451,14 +534,17 @@ def choose_engine(g: GraphStats, q: QuerySpec, n_chips: int) -> Plan:
         need = g.bytes_coo + q.state_bytes_per_vertex * g.n_vertices
         return Plan("distributed", tl, td,
                     f"graph + vertex state ({need/1e9:.1f} GB) exceeds "
-                    f"local budget", variant=q.variant)
+                    f"local budget", variant=q.variant,
+                    candidates=_engine_candidates(q, tl, td, "distributed"))
     if tl <= td:
         why = ("small output" if q.output_rows <= 1024 else "medium graph")
         return Plan("local", tl, td, f"local wins ({why}): "
-                    f"{tl*1e3:.2f} ms vs {td*1e3:.2f} ms", variant=q.variant)
+                    f"{tl*1e3:.2f} ms vs {td*1e3:.2f} ms", variant=q.variant,
+                    candidates=_engine_candidates(q, tl, td, "local"))
     return Plan("distributed", tl, td,
                 f"distributed wins (scale/output): {td*1e3:.2f} ms vs {tl*1e3:.2f} ms",
-                variant=q.variant)
+                variant=q.variant,
+                candidates=_engine_candidates(q, tl, td, "distributed"))
 
 
 def transfer_seconds(g: GraphStats, pool) -> float:
@@ -501,15 +587,19 @@ def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
     if pools is None:
         if len(specs) == 1:
             return choose_engine(g, specs[0], n_chips)
-        best, best_cost = None, float("inf")
+        best, best_cost, table = None, float("inf"), []
         for q in specs:
             plan = choose_engine(g, q, n_chips)
+            table += [dataclasses.replace(c, chosen=False)
+                      for c in plan.candidates]
             # the distributed estimate is always finite, so every spec
             # has a finite comparison cost and the first seeds ``best``
             cost = plan.est_local_s if plan.engine == "local" \
                 else plan.est_dist_s
             if best is None or cost < best_cost:
                 best, best_cost = plan, cost
+        best = dataclasses.replace(
+            best, candidates=mark_chosen(table, best.engine, best.variant))
         if best.variant is not None:
             best = dataclasses.replace(
                 best, reason=f"variant {best.variant}: {best.reason}")
@@ -523,7 +613,9 @@ def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
             f"{[getattr(p, 'name', '?') for p in pools]})")
     best = best_pool = None
     best_cost = float("inf")
-    for pool in healthy:
+    table = []
+    for pool in pools:
+        pool_ok = getattr(pool, "healthy", True)
         pn = getattr(pool, "n_chips", None) or n_chips
         scale = float(getattr(pool, "compute_scale", 1.0))
         transfer = 0.0 if pool.name in resident else transfer_seconds(g, pool)
@@ -531,9 +623,28 @@ def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
             tl = estimate_local_cost(g, q)
             td = estimate_dist_cost(g, q, pn)
             for engine, base in (("local", tl), ("distributed", td)):
-                if engine not in engines:
-                    continue
                 total = scale * base + transfer
+                if not pool_ok:
+                    note = "pool unhealthy"
+                elif engine not in engines:
+                    note = "engine excluded (forced engine or " \
+                           "capability clamp)"
+                elif total == float("inf"):
+                    note = ("exceeds local memory budget"
+                            if base == float("inf")
+                            else "no link bandwidth to transfer")
+                else:
+                    note = ""
+                table.append(PlanCandidate(
+                    engine, q.variant, pool.name, est_s=total,
+                    compute_s=scale * base, transfer_s=transfer,
+                    feasible=not note, note=note))
+                # infinite totals still seed ``best`` (an over-budget
+                # plan must surface so admission can reject it with the
+                # estimate attached); unhealthy pools and clamped
+                # engines never do.
+                if not pool_ok or engine not in engines:
+                    continue
                 if best is None or total < best_cost:
                     best = Plan(engine, tl, td, "", variant=q.variant,
                                 pool=pool.name, est_s=total,
@@ -541,6 +652,8 @@ def choose_plan(g: GraphStats, specs: Sequence[QuerySpec],
                     best_pool, best_cost = pool, total
     if best is None:
         raise ValueError(f"no engine among {tuple(engines)} to place onto")
+    best.candidates = mark_chosen(table, best.engine, best.variant,
+                                  best.pool)
     locality = "resident" if best.transfer_s == 0.0 else \
         f"+{best.transfer_s * 1e3:.2f} ms transfer"
     why = (f"{best.engine} on pool {best_pool.name} ({locality}): "

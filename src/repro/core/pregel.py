@@ -553,6 +553,7 @@ def run_pregel_frontier(
     max_iters: int,
     block_rows: int = 1024,
     init_active: Optional[Array] = None,
+    profile: bool = False,
 ):
     """Run the vertex program with frontier compression.
 
@@ -590,6 +591,15 @@ def run_pregel_frontier(
     an old-fixpoint state already reflects every untouched source's
     message (the fold made it permanent last snapshot).  Ignored in
     delta mode, where round 1 must scatter the full sum regardless.
+
+    ``profile=True`` additionally returns a ``[max_iters] int32`` array
+    of per-round frontier occupancy (the packed count each executed
+    superstep scattered; untaken rounds stay 0) as a third output —
+    the observability counters.  The occupancy rides the while-loop
+    carry, so the flag is part of the jit key: the untraced program is
+    byte-for-byte the old one (zero cost when off), and the counts are
+    a pure *recording* of values the loop already computes, so state
+    trajectories and halt rounds are unchanged.
     """
     _check_superstep_spec(spec, "run_pregel_frontier")
     mode = spec.frontier_mode
@@ -693,36 +703,58 @@ def run_pregel_frontier(
             i, done = carry[-2], carry[-1]
             return jnp.logical_and(i < max_iters, jnp.logical_not(done))
 
+        # Occupancy recording (profile mode) rides the carry *between*
+        # the payload and the (i, done) tail, so ``cond``'s
+        # carry[-2]/carry[-1] indexing and the payload unpack both hold
+        # in either shape.
+        occ0 = jnp.zeros((max_iters,), jnp.int32)
+
         if delta:
             acc0 = jnp.zeros((V + 1,) + agg_trailing, agg_dtype)
 
             def step(carry):
-                s, prev, acc, fr, cnt, first, i, _ = carry
+                if profile:
+                    s, prev, acc, fr, cnt, first, occ, i, _ = carry
+                else:
+                    s, prev, acc, fr, cnt, first, i, _ = carry
                 acc = scatter_frontier(acc, s, prev, fr, cnt, first)
                 new = one_superstep(s, acc[:V])
                 fr2, cnt2 = pack(reduce_active(new != s))
-                return (new, s, acc, fr2, cnt2, jnp.array(False),
-                        i + 1, halt_of(s, new))
+                tail = (i + 1, halt_of(s, new))
+                if profile:
+                    tail = (occ.at[i].set(cnt),) + tail
+                return (new, s, acc, fr2, cnt2, jnp.array(False)) + tail
 
-            carry0 = (state, state, acc0, fr0, cnt0, jnp.array(True),
-                      jnp.int32(0), jnp.array(False))
+            carry0 = (state, state, acc0, fr0, cnt0, jnp.array(True))
         else:
             def step(carry):
-                s, fr, cnt, i, _ = carry
+                if profile:
+                    s, fr, cnt, occ, i, _ = carry
+                else:
+                    s, fr, cnt, i, _ = carry
                 acc0 = jnp.full((V + 1,) + agg_trailing, fill, agg_dtype)
                 acc = scatter_frontier(acc0, s, None, fr, cnt,
                                        jnp.array(False))
                 new = one_superstep(s, acc[:V])
                 fr2, cnt2 = pack(reduce_active(new != s))
-                return new, fr2, cnt2, i + 1, halt_of(s, new)
+                tail = (i + 1, halt_of(s, new))
+                if profile:
+                    tail = (occ.at[i].set(cnt),) + tail
+                return (new, fr2, cnt2) + tail
 
-            carry0 = (state, fr0, cnt0, jnp.int32(0), jnp.array(False))
+            carry0 = (state, fr0, cnt0)
+
+        if profile:
+            carry0 = carry0 + (occ0,)
+        carry0 = carry0 + (jnp.int32(0), jnp.array(False))
 
         out = lax.while_loop(cond, step, carry0)
+        if profile:
+            return out[0], out[-2], out[-3]
         return out[0], out[-2]
 
     key = ("frontier", spec, max_iters, V, K, B,
-           init_state.shape, str(init_state.dtype), seeded)
+           init_state.shape, str(init_state.dtype), seeded, profile)
     fn, key = _jit_cache_get(key)
     if fn is None:
         fn = jax.jit(body)

@@ -26,6 +26,8 @@ from typing import Any, Callable, Mapping, Optional
 
 import numpy as np
 
+from repro.core import obs
+
 
 class _Required:
     """Sentinel for parameters without a default."""
@@ -399,11 +401,21 @@ def uninstall_fault(name: Optional[str] = None) -> None:
 
 def apply_fault(name: str) -> None:
     """Run the installed fault policy for ``name``, if any — the hook
-    the engines call per execution attempt."""
+    the engines call per execution attempt.  Injections surface on the
+    observability event stream (``obs.emit``) so traced drains can see
+    which attempts a policy actually hit."""
     with _FAULTS_LOCK:
         policy = _FAULTS.get(name)
     if policy is not None:
-        policy.apply(name)
+        try:
+            policy.apply(name)
+        except BaseException as e:
+            obs.emit("fault", algorithm=name,
+                     policy=type(policy).__name__, error=repr(e))
+            raise
+        else:
+            obs.emit("fault", algorithm=name,
+                     policy=type(policy).__name__, error=None)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,8 @@ import threading
 from collections import deque
 from typing import Any, Mapping, Optional
 
+from repro.core import obs
+
 
 class Backpressure(Exception):
     """Raised by ``submit`` when the destination queue is at its tier's
@@ -158,8 +160,18 @@ class LatencyHistogram:
         return xs[rank]
 
     def snapshot(self) -> dict:
-        """The ``metrics()`` view: totals, exact p50/p99 over the
-        window, and cumulative ``le``-style bucket counts."""
+        """The ``metrics()`` view: totals, p50/p99 over the retained
+        window, and cumulative ``le``-style bucket counts.
+
+        The quantiles are **exact only while every observation is still
+        retained** (``count <= max_samples``); under longer drains the
+        raw window is a bounded deque, the oldest samples age out, and
+        p50/p99 silently become *window-local* quantiles over the most
+        recent ``window_size`` observations.  ``window_exact`` makes
+        that visible: ``True`` means whole-history quantiles,
+        ``False`` means rolling-window.  The bucket counts are always
+        whole-history (they never age out) — percentiles needing exact
+        long-horizon answers should derive from ``buckets``."""
         cum, acc = {}, 0
         for b, c in zip(self.bounds, self.counts):
             acc += c
@@ -170,6 +182,8 @@ class LatencyHistogram:
             "mean_s": (self.total_s / self.count) if self.count else None,
             "p50_s": self.percentile(50),
             "p99_s": self.percentile(99),
+            "window_exact": self.count <= self._samples.maxlen,
+            "window_size": len(self._samples),
             "buckets": cum,
         }
 
@@ -232,6 +246,7 @@ class TransferLedger:
         with self._lock:
             self._bytes[pool] = self._bytes.get(pool, 0) + int(n_bytes)
             self._count[pool] = self._count.get(pool, 0) + 1
+        obs.emit("transfer", pool=pool, bytes=int(n_bytes))
 
     def bytes_for(self, pool: str) -> int:
         with self._lock:

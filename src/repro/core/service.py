@@ -89,6 +89,7 @@ from collections import OrderedDict, deque
 from typing import Any, Iterable, Optional, Sequence
 
 from repro.core import graph as G
+from repro.core import obs
 from repro.core import planner as P
 from repro.core import pools as PL
 from repro.core import registry as R
@@ -428,13 +429,17 @@ class GraphContext:
             plan = dataclasses.replace(plan, variant=best.variant)
         return priced(plan)
 
-    def execute(self, q, plan: P.Plan, seed=None) -> QueryResult:
+    def execute(self, q, plan: P.Plan, seed=None,
+                profile: bool = False) -> QueryResult:
         """Run the plan.  ``seed`` (an ancestor snapshot's QueryResult)
         is forwarded to the engine only for non-full plans; incremental
         plans also hand over this snapshot's recorded delta so the
         algorithm's localized-repair hook can seed its frontier.  A
         hook that declines falls back to the cold run inside
-        ``Engine.run`` — the answer is the same either way."""
+        ``Engine.run`` — the answer is the same either way.
+        ``profile`` asks the engine for superstep counters
+        (``meta['superstep']``); result values are identical either
+        way."""
         kw = {}
         if seed is not None and plan.mode != "full":
             kw["seed"] = seed
@@ -442,7 +447,7 @@ class GraphContext:
                 kw["delta"] = getattr(self.coo, "delta", None)
         r = self.engine(plan.engine, self.pool_for_plan(plan)).run(
             q.algorithm, q.params, count_only=q.count_only,
-            variant=plan.variant, **kw)
+            variant=plan.variant, profile=profile, **kw)
         r.meta["plan"] = plan
         return r
 
@@ -499,7 +504,9 @@ class GraphAnalyticsService:
                  retry: Optional[RT.RetryPolicy] = None,
                  tier_depth=None,
                  seed: int = 0,
-                 pools=None):
+                 pools=None,
+                 trace_depth: int = 0,
+                 tracer: Optional[obs.Tracer] = None):
         if pools is None:
             self.pools = PL.single_pool()
         elif isinstance(pools, PL.PoolSet):
@@ -565,6 +572,24 @@ class GraphAnalyticsService:
         self._inflight = 0             # units currently executing
         self._hist = {t: RT.LatencyHistogram() for t in self.TIER_ORDER}
         self._fusion_widths: deque = deque(maxlen=4096)
+        # -- observability ---------------------------------------------
+        # ``trace_depth > 0`` (or an explicit tracer) turns on span
+        # tracing: per-ticket span trees bounded to the newest
+        # trace_depth tickets, superstep profiling on every traced
+        # execution, and process-wide fault/transfer events routed in
+        # through the observer seam.  Off (the default) every hook is a
+        # single ``is not None`` check.  The PlanAccuracyMeter is
+        # always on — recording two floats per execution is cheaper
+        # than the estimate it corrects.
+        if tracer is not None:
+            self.tracer: Optional[obs.Tracer] = tracer
+        elif trace_depth > 0:
+            self.tracer = obs.Tracer(trace_depth=trace_depth)
+        else:
+            self.tracer = None
+        if self.tracer is not None:
+            obs.install_observer(self.tracer)
+        self._accuracy = obs.PlanAccuracyMeter()
 
     # -- tier thresholds ----------------------------------------------------
     @property
@@ -862,7 +887,12 @@ class GraphAnalyticsService:
         seed, seed_mode = self._seed_for(ctx, q)
         plan = ctx.plan(q, seed_mode=seed_mode)
         self._account_transfer(ctx, plan)
+        t0 = time.perf_counter()
         r = ctx.execute(q, plan, seed=seed)
+        self._accuracy.record(q.algorithm, plan.engine, plan.variant,
+                              plan.pool, est_s=P.plan_cost(plan),
+                              wall_s=time.perf_counter() - t0,
+                              mode=plan.mode)
         with self._lock:
             self.stats["executed"] += 1
         self._record_incremental(r, seed, ctx)
@@ -872,15 +902,21 @@ class GraphAnalyticsService:
         self._cache_put(self._result_key(ctx, q), r)
         return r
 
-    def _account_transfer(self, ctx: GraphContext, plan: P.Plan) -> None:
+    def _account_transfer(self, ctx: GraphContext, plan: P.Plan,
+                          tickets: Sequence[QueryTicket] = ()) -> None:
         """Executing on a pool materializes the snapshot's derived state
         there: the first time charges the snapshot bytes to the transfer
         ledger and marks the pool resident (declared-resident pools were
-        never charged — the replica was already in place)."""
+        never charged — the replica was already in place).  A charged
+        transfer is marked on each involved ticket's trace."""
         if plan.pool is None:
             return
         if ctx.mark_resident(plan.pool):
             self._ledger.record(plan.pool, ctx.stats.bytes_coo)
+            if self.tracer is not None and tickets:
+                self.tracer.ticket_event(
+                    [t.ticket_id for t in tickets], "transfer",
+                    {"pool": plan.pool, "bytes": ctx.stats.bytes_coo})
 
     # -- submission ---------------------------------------------------------
     def submit(self, graph_name: str, q, as_of=None) -> QueryTicket:
@@ -915,10 +951,15 @@ class GraphAnalyticsService:
             # default infinite budget, where `inf > inf` would admit it
             if est > self.admission_budget_s or est == float("inf"):
                 self.stats["rejected"] += 1
+                if self.tracer is not None:
+                    self.tracer.record_event("admission-rejected", {
+                        "graph": graph_name, "algorithm": q.algorithm,
+                        "est_s": est, "budget_s": self.admission_budget_s})
                 raise AdmissionRejected(graph_name, q, plan, est,
                                         self.admission_budget_s)
             tier = ("interactive" if est <= self.interactive_threshold_s
                     else "batch")
+            planned = plan
             if tier == "batch":
                 plan = self._maybe_spill(ctx, q, plan)
             budget = self._tier_depth.get(tier)
@@ -926,6 +967,11 @@ class GraphAnalyticsService:
                 depth = self._queue_depth(plan.engine, tier)
                 if depth >= budget:
                     self.stats["backpressure"] += 1
+                    if self.tracer is not None:
+                        self.tracer.record_event("backpressure", {
+                            "graph": graph_name,
+                            "algorithm": q.algorithm, "tier": tier,
+                            "depth": depth, "budget": budget})
                     raise RT.Backpressure(graph_name, q, plan.engine,
                                           tier, depth, budget)
             defn = R.get(q.algorithm)
@@ -942,6 +988,26 @@ class GraphAnalyticsService:
             self._queues.setdefault((plan.pool, plan.engine, tier),
                                     deque()).append(ticket)
             self.stats["submitted"] += 1
+            if self.tracer is not None:
+                original = None
+                if plan is not planned:    # _maybe_spill re-placed it
+                    original = {"pool": planned.pool,
+                                "engine": planned.engine,
+                                "variant": planned.variant,
+                                "est_s": planned.est_s}
+                self.tracer.on_submit(
+                    ticket, ticket.queued_at,
+                    admission={"est_s": est,
+                               "budget_s": self.admission_budget_s,
+                               "threshold_s": self.interactive_threshold_s,
+                               "tier": tier},
+                    plan_attrs={"engine": plan.engine,
+                                "variant": plan.variant,
+                                "pool": plan.pool, "mode": plan.mode,
+                                "est_s": P.plan_cost(plan),
+                                "reason": plan.reason},
+                    candidates=plan.candidates,
+                    original_placement=original)
             self._cond.notify_all()       # wake a parked worker
             return ticket
 
@@ -1064,6 +1130,8 @@ class GraphAnalyticsService:
                 # queued: claim it (interactive) or drain the service
                 if t.tier == "interactive":
                     t.status = "running"
+                    if self.tracer is not None:
+                        self.tracer.on_dequeue([t.ticket_id])
                     claimed = True
                 else:
                     drain_needed = True
@@ -1117,7 +1185,41 @@ class GraphAnalyticsService:
                 "incremental": self._meter.snapshot(),
                 "pools": {p.name: self._pool_metrics(p)
                           for p in self.pools},
+                "accuracy": self._accuracy.snapshot(),
+                "trace": (self.tracer.counters_snapshot()
+                          if self.tracer is not None
+                          else {"enabled": 0, "depth": 0, "retained": 0,
+                                "tickets": 0, "spans": 0, "evicted": 0,
+                                "events": 0}),
             }
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of :meth:`metrics` — every
+        numeric field flattened to a ``gas_``-prefixed sample line
+        (``None`` becomes ``NaN``), non-numeric fields preserved as
+        comment lines.  ``obs.parse_prometheus`` round-trips it."""
+        return obs.render_prometheus(self.metrics())
+
+    def explain(self, ticket) -> str:
+        """Human-readable span tree for one ticket: admission verdict,
+        the full plan-candidate table (losers annotated with why they
+        lost), queue wait, each attempt with retry/fault events, the
+        superstep counters of the execution that served it, and the
+        resolution.  ``ticket`` is a :class:`QueryTicket` or a raw
+        ticket id.  Requires the service to have been built with
+        ``trace_depth > 0`` (or an explicit tracer)."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off — construct the service with "
+                "trace_depth > 0 (or pass tracer=) to record span trees")
+        tid = getattr(ticket, "ticket_id", ticket)
+        trace = self.tracer.trace(tid)
+        if trace is None:
+            raise KeyError(
+                f"no trace retained for ticket #{tid}: it was never "
+                f"submitted here, or it aged out of the "
+                f"{self.tracer.trace_depth}-ticket trace ring")
+        return obs.render_trace(trace)
 
     def _pool_metrics(self, p: PL.DevicePool) -> dict:
         """One pool's metrics row (caller holds the lock).  On a
@@ -1184,11 +1286,16 @@ class GraphAnalyticsService:
                         q.popleft()
                         if tier == "interactive":
                             head.status = "running"
+                            if self.tracer is not None:
+                                self.tracer.on_dequeue([head.ticket_id])
                             return _WorkUnit("solo", engine, [head],
                                              pool=pool)
                         group = self._take_fuse_group(q, head)
                         for t in group:
                             t.status = "running"
+                        if self.tracer is not None:
+                            self.tracer.on_dequeue(
+                                [t.ticket_id for t in group])
                         return _WorkUnit("group", engine, group,
                                          pool=pool)
         return None
@@ -1254,31 +1361,48 @@ class GraphAnalyticsService:
         # the determinism the stress harness replays
         return self.seed * 1_000_003 + ticket_id
 
-    def _run_with_retries(self, thunk, seed_id: int, tickets: list):
+    def _run_with_retries(self, thunk, seed_id: int, tickets: list,
+                          fused: bool = False):
         """Execute ``thunk`` under the retry policy.  Returns
         ``(result, None)`` on success or ``(None, error)`` once the
         policy gives up; ``error`` carries the full attempt chain
         (attempt k's exception is the ``__cause__`` of attempt k+1's).
         Sleeps follow the jittered schedule seeded per ticket, so a
-        replayed drain backs off identically."""
+        replayed drain backs off identically.  Each attempt opens one
+        attempt span per ticket around a shared execute span (tracing
+        on); the final failure's span carries the whole chain."""
         schedule = self.retry.schedule(self._backoff_seed(seed_id))
+        ids = [t.ticket_id for t in tickets]
         last: Optional[BaseException] = None
         for attempt in range(1, self.retry.max_attempts + 1):
             for t in tickets:
                 t.attempts = attempt
+            handle = None
+            if self.tracer is not None:
+                handle = self.tracer.on_attempt_start(ids, attempt,
+                                                      fused=fused)
             try:
-                return thunk(), None
+                out = thunk()
             except Exception as e:
                 if last is not None and e is not last \
                         and e.__cause__ is None:
                     e.__cause__ = last       # preserve the attempt chain
                 last = e
+                if handle is not None:
+                    self.tracer.on_attempt_end(handle, e)
                 if not self.retry.retryable(e) \
                         or attempt >= self.retry.max_attempts:
                     return None, e
                 with self._lock:
                     self.stats["retries"] += 1
+                if self.tracer is not None:
+                    self.tracer.on_retry(ids, attempt,
+                                         schedule[attempt - 1])
                 time.sleep(schedule[attempt - 1])
+            else:
+                if handle is not None:
+                    self.tracer.on_attempt_end(handle)
+                return out, None
         return None, last                    # pragma: no cover
 
     def _execute_unit(self, unit: _WorkUnit, finished: list) -> None:
@@ -1294,26 +1418,65 @@ class GraphAnalyticsService:
         key = self._result_key(ctx, t.query)
         hit = self._cache_get(key)
         if hit is not None:
+            if self.tracer is not None:
+                self.tracer.ticket_event([t.ticket_id], "cache-hit")
             self._finish(t, hit)
             finished.append(t)
             return
-        self._account_transfer(ctx, t.plan)
+        self._account_transfer(ctx, t.plan, [t])
+        profile = self.tracer is not None
+        t0 = time.perf_counter()
         r, err = self._run_with_retries(
-            lambda: ctx.execute(t.query, t.plan, seed=t.seed),
+            lambda: ctx.execute(t.query, t.plan, seed=t.seed,
+                                profile=profile),
             t.ticket_id, [t])
+        wall = time.perf_counter() - t0
         if err is not None:
             self._dead_letter([t], err)
             finished.append(t)
             return
+        self._accuracy.record(t.query.algorithm, t.plan.engine,
+                              t.plan.variant, t.plan.pool,
+                              est_s=t.est_s, wall_s=wall,
+                              mode=t.plan.mode)
+        if self.tracer is not None:
+            self.tracer.on_execute_result(
+                [t.ticket_id], engine=r.engine,
+                attrs=self._result_attrs(r, wall))
         self._record_incremental(r, t.seed, ctx)
         with self._lock:
             self.stats["executed"] += 1
             # re-key: accounting may have materialized the pool
-            self._cache_put(self._result_key(ctx, t.query), r)
+            self._cache_put(self._result_key(ctx, t.query),
+                            self._strip_run_meta(r))
             self._finish(t, r)
             self._log(t.plan.engine, t.tier, [t], fused=False,
                       algorithm=t.query.algorithm)
         finished.append(t)
+
+    @staticmethod
+    def _result_attrs(r: QueryResult, wall: float) -> dict:
+        """Execute-span annotations from what actually ran."""
+        attrs = {"wall_s": wall, "iterations": r.iterations}
+        for k in ("variant", "mode"):
+            if k in r.meta:
+                attrs[k] = r.meta[k]
+        if "superstep" in r.meta:
+            attrs["superstep"] = dict(r.meta["superstep"])
+        return attrs
+
+    @staticmethod
+    def _strip_run_meta(r: QueryResult,
+                        also: Sequence[str] = ()) -> QueryResult:
+        """The cacheable copy of a result: drop meta keys that describe
+        THIS execution (superstep counters, fusion shape) — a later
+        cache hit replaying them would claim an execution that never
+        happened for that caller."""
+        drop = {"superstep", *also}
+        if not (drop & r.meta.keys()):
+            return r
+        return dataclasses.replace(
+            r, meta={k: v for k, v in r.meta.items() if k not in drop})
 
     def _execute_group(self, engine: str, group: list[QueryTicket],
                        finished: list) -> None:
@@ -1327,6 +1490,8 @@ class GraphAnalyticsService:
         for t in group:
             hit = self._cache_get(self._result_key(ctx, t.query))
             if hit is not None:
+                if self.tracer is not None:
+                    self.tracer.ticket_event([t.ticket_id], "cache-hit")
                 self._finish(t, hit)
                 finished.append(t)
             else:
@@ -1338,17 +1503,36 @@ class GraphAnalyticsService:
             for t in run:
                 self._execute_solo(t, finished)
             return
-        self._account_transfer(ctx, run[0].plan)
+        self._account_transfer(ctx, run[0].plan, run)
         pool = ctx.pool_for_plan(run[0].plan)
+        profile = self.tracer is not None
+        t0 = time.perf_counter()
         r, err = self._run_with_retries(
             lambda: ctx.engine(engine, pool).run_batch(
                 defn, [t.query.params for t in run],
-                count_only=[t.query.count_only for t in run]),
-            run[0].ticket_id, run)
+                count_only=[t.query.count_only for t in run],
+                profile=profile),
+            run[0].ticket_id, run, fused=True)
+        wall = time.perf_counter() - t0
         if err is not None:
             self._dead_letter(run, err)
             finished.extend(run)
             return
+        # one fused execution, one accuracy sample: the group's shared
+        # wall against the head ticket's estimate, width recorded
+        head = run[0]
+        self._accuracy.record(head.query.algorithm, head.plan.engine,
+                              head.plan.variant, head.plan.pool,
+                              est_s=head.est_s, wall_s=wall,
+                              mode=head.plan.mode, width=len(run))
+        if self.tracer is not None:
+            self.tracer.on_execute_result(
+                [t.ticket_id for t in run], engine=r[0].engine,
+                attrs={**self._result_attrs(r[0], wall),
+                       "batch_size": len(run)},
+                per_ticket={t.ticket_id: {"est_s": t.est_s,
+                                          "index": i}
+                            for i, t in enumerate(run)})
         with self._lock:
             self.stats["executed"] += 1
             self.stats["fused_batches"] += 1
@@ -1356,13 +1540,12 @@ class GraphAnalyticsService:
             self._fusion_widths.append(len(run))
             for t, res in zip(run, r):
                 res.meta["plan"] = t.plan
-                # the cached copy drops 'fused' — it describes THIS run;
-                # a later hit replaying it would claim a fusion that
-                # never happened for that caller (the ticket keeps the
-                # full meta)
-                cached = dataclasses.replace(
-                    res, meta={k: v for k, v in res.meta.items()
-                               if k != "fused"})
+                # the cached copy drops 'fused' (and the superstep
+                # counters) — they describe THIS run; a later hit
+                # replaying them would claim a fusion that never
+                # happened for that caller (the ticket keeps the full
+                # meta)
+                cached = self._strip_run_meta(res, also=("fused",))
                 self._cache_put(self._result_key(ctx, t.query), cached)
                 self._finish(t, res)
             self._log(engine, "batch", run, fused=True,
@@ -1376,6 +1559,8 @@ class GraphAnalyticsService:
             self._hist[t.tier].observe(time.perf_counter() - t.queued_at)
             self._age_out(t)
             self._cond.notify_all()
+        if self.tracer is not None:
+            self.tracer.on_resolve([t.ticket_id], "done")
 
     def _dead_letter(self, tickets, error: BaseException) -> None:
         """The retry policy gave up: the tickets must not be stranded
@@ -1392,6 +1577,9 @@ class GraphAnalyticsService:
             self.stats["failed"] += len(tickets)
             self.stats["dead_letters"] += len(tickets)
             self._cond.notify_all()
+        if self.tracer is not None:
+            self.tracer.on_resolve([t.ticket_id for t in tickets],
+                                   "dead-letter", error)
 
     def _age_out(self, t: QueryTicket) -> None:
         """Record ``t`` as resolved and evict the oldest resolved

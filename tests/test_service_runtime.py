@@ -261,10 +261,19 @@ def test_metrics_snapshot_fields(graph):
 
 # ------------------------------------------- deterministic concurrency
 
+def _trace_kwargs() -> dict:
+    """Service kwargs for the CI observability gate: setting
+    ``RUNTIME_TRACE_DEPTH=<n>`` re-runs the digest-emitting stress
+    tests with tracing *enabled*, and the digest diff against the
+    untraced run proves tracing never perturbs results."""
+    depth = int(os.environ.get("RUNTIME_TRACE_DEPTH", "0"))
+    return {"trace_depth": depth} if depth > 0 else {}
+
+
 def _stress_services(graph, graph2, **kw):
     """Fresh service over two snapshots pinned to different engines, so
     the workload provably spans both."""
-    svc = GraphAnalyticsService(cache_size=64, **kw)
+    svc = GraphAnalyticsService(cache_size=64, **_trace_kwargs(), **kw)
     svc.add_graph("local_g", graph, force_engine="local")
     svc.add_graph("dist_g", graph2, n_data=4, force_engine="distributed")
     return svc
@@ -451,7 +460,7 @@ def test_federation_spill_stress_digest(graph, graph2):
                 PL.DevicePool("cloud", capacity=32, compute_scale=1.0),
             ]),
             interactive_threshold_s=0.0,   # everything batches
-            cache_size=64)
+            cache_size=64, **_trace_kwargs())
         svc.add_graph("g", graph)
         svc.add_graph("h", graph2)
         workload = _stress_workload(n_tickets=60, seed=99)
@@ -504,7 +513,7 @@ def test_incremental_lineage_stress_digest(graph):
                GraphQuery.of("hits")]
 
     def run(workers):
-        svc = GraphAnalyticsService(cache_size=64)
+        svc = GraphAnalyticsService(cache_size=64, **_trace_kwargs())
         svc.add_snapshot("g", sym, as_of=0)
         for q in queries:                    # parent answers = the seeds
             svc.call("g", q, as_of=0)
